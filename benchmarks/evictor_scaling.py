@@ -1,0 +1,60 @@
+"""Paper Fig. 9: eviction-algorithm control-plane time vs cache size.
+
+O(n) policies (Max-Score / Pensieve / AsymCache-linear) scan every
+evictable block per eviction; the two-treap AsymCache evictor is
+O(log n).  We drive each policy with an identical add/hit/evict trace at
+growing block counts (up to the paper's ">100K blocks when offloading to
+CPU memory" regime) and report time per eviction."""
+from __future__ import annotations
+
+import math
+import random
+import time
+
+from benchmarks.common import Rows
+from repro.core import EvictableMeta, FreqParams, make_policy
+
+SIZES = [1_000, 8_000, 32_000, 100_000]
+POLICIES = ["asymcache", "asymcache-on", "maxscore", "pensieve", "lru"]
+
+
+def drive(policy_name: str, n_blocks: int, n_evictions: int = 400,
+          seed: int = 0):
+    rng = random.Random(seed)
+    fp = FreqParams.from_turning_point(lifespan=30.0)
+    pol = make_policy(policy_name, fp)
+    now = 0.0
+    for i in range(n_blocks):
+        now += 0.01
+        pol.add(i, EvictableMeta(last_access=now - rng.random() * 100,
+                                 log_cost=math.log(1e-6 + rng.random() * 1e-3),
+                                 count=1 + rng.random() * 5))
+    t0 = time.perf_counter()
+    nxt = n_blocks
+    for _ in range(n_evictions):
+        now += 0.05
+        pol.evict(now)
+        pol.add(nxt, EvictableMeta(last_access=now,
+                                   log_cost=math.log(1e-5), count=1.0))
+        nxt += 1
+    dt = time.perf_counter() - t0
+    return dt / n_evictions
+
+
+def main(sizes=SIZES, policies=POLICIES) -> Rows:
+    rows = Rows()
+    for n in sizes:
+        base = None
+        for p in policies:
+            n_ev = 400 if n <= 32_000 or not p.endswith(("on", "score", "sieve")) \
+                else 100
+            per = drive(p, n, n_evictions=n_ev)
+            if p == "asymcache":
+                base = per
+            rows.add(f"evictor_scaling/{p}/n={n}", per * 1e6,
+                     f"x_vs_logn={per/max(base,1e-12):.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main().emit()

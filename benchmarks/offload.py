@@ -1,0 +1,38 @@
+"""Beyond-paper: hierarchical KV storage (paper §7, flagged as future
+work there, implemented here).
+
+Evicted blocks spill to a host tier; on reuse they swap back over PCIe
+instead of being recomputed.  The swap cost is SIZE-based while recompute
+cost is POSITION-based, so host reloads win hardest for deep-position
+blocks — the same asymmetry the evictor exploits, now across tiers."""
+from __future__ import annotations
+
+from benchmarks.common import Rows, longbench_like, pressured_server, workload_footprint
+
+
+def main(n_sessions: int = 10) -> Rows:
+    rows = Rows()
+    for disp, ratio in (("low", 5.0), ("high", 10.0)):
+        wl_args = dict(qps=0.2, intra_ratio=ratio,
+                       seed=0 if disp == "low" else 1)
+        base_wl = longbench_like(n_sessions, **wl_args)
+        foot_blocks = workload_footprint(base_wl) // 16
+        for host_frac, label in ((0.0, "device-only"),
+                                 (1.0, "host=1x-footprint"),
+                                 (4.0, "host=4x-footprint")):
+            wl = longbench_like(n_sessions, **wl_args)
+            srv = pressured_server(
+                "asymcache", wl, pressure=0.3,
+                lifespan=2.0 * ratio / 0.2,
+                host_blocks=int(foot_blocks * host_frac))
+            res = srv.run(wl)
+            rows.add(f"offload/{disp}/{label}", res["ttft_mean"] * 1e6,
+                     f"tpot_ms={res['tpot_mean']*1e3:.2f};"
+                     f"hit={res['block_hit_rate']:.3f};"
+                     f"swap_ins={res.get('swap_ins', 0)};"
+                     f"evict={res['evictions']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main().emit()

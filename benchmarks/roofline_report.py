@@ -1,0 +1,55 @@
+"""Roofline report: aggregates results/dryrun/*.json into the per-cell
+three-term table (EXPERIMENTS.md §Roofline reads from this)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Rows
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(mesh: str = "pod16x16"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def main() -> Rows:
+    rows = Rows()
+    n_ok = n_skip = n_err = 0
+    for rec in load_cells():
+        name = f"roofline/{rec['arch']}/{rec['shape']}"
+        if rec["status"] == "skipped":
+            n_skip += 1
+            rows.add(name, 0.0, "SKIP:" + rec.get("reason", "")[:40])
+            continue
+        if rec["status"] != "ok":
+            n_err += 1
+            rows.add(name, 0.0, "ERROR:" + rec.get("error", "")[:60])
+            continue
+        n_ok += 1
+        r = rec["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.add(name, bound * 1e6,
+                 f"compute_ms={r['compute_s']*1e3:.2f};"
+                 f"memory_ms={r['memory_s']*1e3:.2f};"
+                 f"collective_ms={r['collective_s']*1e3:.2f};"
+                 f"bound={r['bottleneck']};useful={r['useful_ratio']:.3f};"
+                 f"frac={r['roofline_fraction']:.4f}")
+    for rec in load_cells("pod2x16x16"):
+        if rec["status"] == "ok":
+            rows.add(f"multipod/{rec['arch']}/{rec['shape']}", 0.0,
+                     f"compiled_ok;peakGB="
+                     f"{rec['memory']['peak_bytes']/1e9:.1f}")
+    rows.add("roofline/_summary", 0.0,
+             f"ok={n_ok};skip={n_skip};err={n_err}")
+    return rows
+
+
+if __name__ == "__main__":
+    main().emit()

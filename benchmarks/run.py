@@ -1,0 +1,60 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  Fig. 11/12  e2e_serving        policy x dispersion x dataset TTFT/TPOT
+  Table 2     evictor_complexity O(log n) vs O(n) vs LRU end-to-end
+  Fig. 9      evictor_scaling    control-plane time vs cache size
+  Fig. 13     msa_kernel         MSA vs 2-call vs prefix-only
+  Fig. 14     sensitivity        lifespan / reuse-prob / slope sweeps
+  Fig. 15     agentic            Continuum integration, QPS sweep
+  Fig. 3/7    workload_stats     hit-position + reuse-interval PDFs
+  (ours)      roofline_report    dry-run three-term roofline table
+"""
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("e2e_serving", {}),
+    ("evictor_complexity", {}),
+    ("evictor_scaling", {}),
+    ("msa_kernel", {}),
+    ("sensitivity", {}),
+    ("agentic", {}),
+    ("workload_stats", {}),
+    ("offload", {}),
+    ("roofline_report", {}),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, kw in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            rows = mod.main(**kw)
+            rows.emit()
+            print(f"bench/{name}/_elapsed,{(time.time()-t0)*1e6:.0f},ok")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc(file=sys.stderr)
+            print(f"bench/{name}/_elapsed,{(time.time()-t0)*1e6:.0f},"
+                  f"FAILED:{type(e).__name__}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Fig. 14: hyper-parameter sensitivity — lifespan (X of the turning
+point), reuse probability (Y), slope-change ratio.  TTFT + block hit rate
+per setting; AsymCache should stay stable across a broad range and beat
+vLLM-LRU throughout (except degenerate slope=10)."""
+from __future__ import annotations
+
+from benchmarks.common import Rows, longbench_like, pressured_server
+
+
+def _run(policy: str, wl, **kw):
+    srv = pressured_server(policy, wl, pressure=0.2, **kw)
+    return srv.run(wl)
+
+
+def main(n_sessions: int = 8) -> Rows:
+    rows = Rows()
+    wl_args = dict(qps=0.05, intra_ratio=5.0, seed=7)
+
+    wl = longbench_like(n_sessions, **wl_args)
+    lru = _run("lru", wl)
+    rows.add("sensitivity/lru_reference", lru["ttft_mean"] * 1e6,
+             f"hit={lru['block_hit_rate']:.3f}")
+
+    for lifespan in (15.0, 30.0, 60.0, 120.0, 240.0):
+        wl = longbench_like(n_sessions, **wl_args)
+        r = _run("asymcache", wl, lifespan=lifespan)
+        rows.add(f"sensitivity/lifespan={lifespan:g}", r["ttft_mean"] * 1e6,
+                 f"hit={r['block_hit_rate']:.3f}")
+    for reuse_prob in (0.1, 0.3, 0.5, 0.7, 0.9):
+        wl = longbench_like(n_sessions, **wl_args)
+        r = _run("asymcache", wl, reuse_prob=reuse_prob)
+        rows.add(f"sensitivity/reuse_prob={reuse_prob:g}",
+                 r["ttft_mean"] * 1e6, f"hit={r['block_hit_rate']:.3f}")
+    for slope in (10.0, 20.0, 40.0, 80.0, 160.0):
+        wl = longbench_like(n_sessions, **wl_args)
+        r = _run("asymcache", wl, slope_ratio=slope)
+        rows.add(f"sensitivity/slope={slope:g}", r["ttft_mean"] * 1e6,
+                 f"hit={r['block_hit_rate']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main().emit()

@@ -1,0 +1,56 @@
+"""Training driver: train a ~100M-param dense LM for a few hundred steps
+on the synthetic pipeline, with checkpoint/restart fault tolerance.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--resume]
+"""
+import argparse
+import os
+
+from repro.configs.base import ModelConfig
+from repro.training import DataConfig, TrainConfig, Trainer, adamw
+
+# ~100M params: 12L x 768 with a 32k vocab
+CONFIG_100M = ModelConfig(
+    name="demo-100m", family="dense", n_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=32_000,
+    tie_embeddings=True, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--tiny", action="store_true",
+                    help="25M-param config for quick CPU demos")
+    args = ap.parse_args()
+
+    cfg = CONFIG_100M
+    if args.tiny:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, name="demo-25m", n_layers=6,
+                                  d_model=384, n_heads=6, n_kv_heads=2,
+                                  d_ff=1024)
+        args.batch, args.seq = 4, 128
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.0f}M params)")
+    tr = Trainer(
+        cfg,
+        TrainConfig(steps=args.steps, ckpt_every=50, ckpt_dir=args.ckpt_dir,
+                    grad_accum=2, lr=3e-4),
+        DataConfig(seq_len=args.seq, global_batch=args.batch),
+        opt=adamw(lr=3e-4))
+    start = tr.init_or_resume()
+    if start:
+        print(f"resumed from checkpoint at step {start}")
+    hist = tr.run()
+    losses = [h["loss"] for h in hist if "loss" in h]
+    if losses:
+        print(f"steps {start}->{tr.step}: loss {losses[0]:.3f} -> "
+              f"{losses[-1]:.3f}")
+    print(f"checkpoints in {args.ckpt_dir}: resumable with --steps "
+          f"{args.steps + 100}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+# The paper's primary contribution: expected-latency-aware KV cache
+# management (AsymCache) — frequency function, O(log n) evictor,
+# cost model, block manager, online lifespan adaptation.
+from repro.core.block_manager import Block, BlockManager, MatchResult, chain_hash
+from repro.core.cost_model import (
+    H20,
+    TPU_V5E,
+    CostModel,
+    Hardware,
+    analytic_cost_model,
+    fit,
+    mixed_window_cost_model,
+)
+from repro.core.evictor import (
+    POLICIES,
+    AsymCacheEvictor,
+    AsymCacheLinearEvictor,
+    EvictableMeta,
+    EvictionPolicy,
+    LRUEvictor,
+    MaxScoreEvictor,
+    PensieveEvictor,
+    make_policy,
+)
+from repro.core.freq import EwmaCounter, FreqParams
+from repro.core.lifespan import LifespanTracker
+from repro.core.treap import Treap
+
+__all__ = [
+    "Block", "BlockManager", "MatchResult", "chain_hash",
+    "CostModel", "Hardware", "H20", "TPU_V5E", "analytic_cost_model",
+    "fit", "mixed_window_cost_model",
+    "POLICIES", "AsymCacheEvictor", "AsymCacheLinearEvictor",
+    "EvictableMeta", "EvictionPolicy", "LRUEvictor", "MaxScoreEvictor",
+    "PensieveEvictor", "make_policy",
+    "EwmaCounter", "FreqParams", "LifespanTracker", "Treap",
+]

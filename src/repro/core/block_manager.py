@@ -1,0 +1,281 @@
+"""Paged KV-cache block manager with multi-segment (non-prefix) matching.
+
+The pool holds ``num_blocks`` fixed-size blocks.  A cached block is keyed by
+the **chain hash** of all tokens from the start of the sequence through the
+end of that block — the lossless-reuse condition (a block's K/V depend on
+its entire prefix).  Because the evictor can evict arbitrary blocks, a new
+request may hit any *subset* of its blocks, producing multiple discontiguous
+hit segments; the gaps are recomputed via Multi-Segment Attention.
+
+Bookkeeping per block:
+  * ``block_pos``   — immutable positional index within its sequence (number
+                      of predecessor blocks) → the Eq.-7 cost term.
+  * ``ref_count``   — active requests currently mapping the block.
+  * ``pinned_until``— Continuum-style TTL pin (ignored by eviction).
+  * frequency state — last access + EWMA count (feeds the evictor keys).
+"""
+from __future__ import annotations
+
+import math
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import CostModel
+from repro.core.evictor import EvictableMeta, EvictionPolicy
+from repro.core.freq import EwmaCounter, FreqParams
+
+
+def chain_hash(prev_hash: int, tokens: Tuple[int, ...]) -> int:
+    return hash((prev_hash, tokens))
+
+
+@dataclass
+class Block:
+    slot: int                       # index into the device KV pool
+    key: Optional[int] = None       # chain hash (None = uncommitted)
+    block_pos: int = 0
+    ref_count: int = 0
+    pinned_until: float = -math.inf
+    last_access: float = 0.0
+    count: float = 1.0              # EWMA hit count
+    boost: float = 1.0              # agentic tool-call correction factor
+
+
+@dataclass
+class MatchResult:
+    """Per-request match: block-level hits and the segment structure."""
+    hit_slots: List[Optional[int]]  # per block idx: pool slot or None
+    num_blocks: int
+    hit_mask: List[bool]
+    # blocks resident in the HOST tier (paper §7 hierarchical storage):
+    # reusable via swap-in instead of recompute
+    host_hits: List[bool] = field(default_factory=list)
+
+    @property
+    def num_hits(self) -> int:
+        return sum(self.hit_mask)
+
+    def segments(self) -> List[Tuple[int, int, bool]]:
+        """[(start_block, end_block, is_hit)] alternating runs."""
+        segs: List[Tuple[int, int, bool]] = []
+        i = 0
+        while i < self.num_blocks:
+            j = i
+            while j < self.num_blocks and self.hit_mask[j] == self.hit_mask[i]:
+                j += 1
+            segs.append((i, j, self.hit_mask[i]))
+            i = j
+        return segs
+
+
+class BlockManager:
+    def __init__(self, num_blocks: int, block_size: int,
+                 policy: EvictionPolicy, cost_model: CostModel,
+                 freq: FreqParams, count_gamma: Optional[float] = None,
+                 host_blocks: int = 0,
+                 swap_out_fn=None, swap_in_fn=None):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.policy = policy
+        self.cost_model = cost_model
+        self.freq = freq
+        self.count_gamma = count_gamma or freq.lifespan
+        self.blocks: List[Block] = [Block(slot=i) for i in range(num_blocks)]
+        self.free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self.table: Dict[int, int] = {}     # chain hash -> slot
+        # ---- host tier (paper §7): evicted blocks spill to host memory;
+        # reload cost is SIZE-based (one PCIe/DMA copy), not position-based,
+        # so the device evictor's position-aware policy is unchanged and
+        # the host tier runs plain LRU over (key -> payload, block_pos).
+        self.host_blocks = host_blocks
+        self.host_tier: "OrderedDict[int, Tuple[object, int]]" = OrderedDict()
+        self.swap_out_fn = swap_out_fn      # slot -> payload (device->host)
+        self.swap_in_fn = swap_in_fn        # (slot, payload) -> None
+        self.n_swap_ins = 0
+        self.n_swap_outs = 0
+        # stats
+        self.n_lookups = 0
+        self.n_hits = 0
+        self.n_evictions = 0
+        self.evicted_positions: List[int] = []
+        self.hit_positions: List[Tuple[int, int]] = []  # (block_pos, n_blocks)
+        self.reuse_intervals: List[float] = []  # observed block reuse gaps
+
+    # ------------------------------------------------------------------
+    # matching
+    # ------------------------------------------------------------------
+    def block_hashes(self, tokens: Sequence[int]) -> List[int]:
+        """Chain hashes for each *full* block of ``tokens``."""
+        out = []
+        h = 0
+        n_full = len(tokens) // self.block_size
+        for i in range(n_full):
+            chunk = tuple(tokens[i * self.block_size:(i + 1) * self.block_size])
+            h = chain_hash(h, chunk)
+            out.append(h)
+        return out
+
+    def match(self, tokens: Sequence[int], now: float,
+              acquire: bool = True,
+              hashes: Optional[List[int]] = None) -> MatchResult:
+        """Find resident blocks for this token sequence (any subset!).
+
+        With ``acquire=True`` hit blocks are ref-counted and removed from
+        the evictable set, so a concurrent eviction can't take them.
+        ``hashes`` may be precomputed (admission retries reuse them)."""
+        if hashes is None:
+            hashes = self.block_hashes(tokens)
+        hit_slots: List[Optional[int]] = []
+        hit_mask: List[bool] = []
+        host_hits: List[bool] = []
+        for pos, h in enumerate(hashes):
+            slot = self.table.get(h)
+            self.n_lookups += 1
+            if slot is None:
+                hit_slots.append(None)
+                hit_mask.append(False)
+                host_hits.append(h in self.host_tier)
+                continue
+            host_hits.append(False)
+            self.n_hits += 1
+            blk = self.blocks[slot]
+            if acquire:
+                if blk.ref_count == 0:
+                    self.policy.remove(slot)
+                    self.reuse_intervals.append(max(now - blk.last_access,
+                                                    1e-9))
+                blk.ref_count += 1
+                blk.count = (blk.count * math.exp(
+                    -(now - blk.last_access) / self.count_gamma) + 1.0)
+                blk.last_access = now
+            hit_slots.append(slot)
+            hit_mask.append(True)
+            self.hit_positions.append((pos, len(hashes)))
+        return MatchResult(hit_slots=hit_slots, num_blocks=len(hashes),
+                           hit_mask=hit_mask, host_hits=host_hits)
+
+    # ------------------------------------------------------------------
+    # allocation / eviction
+    # ------------------------------------------------------------------
+    def num_free(self) -> int:
+        return len(self.free) + len(self.policy)
+
+    def allocate(self, n: int, now: float) -> Optional[List[int]]:
+        """Allocate ``n`` fresh blocks, evicting if necessary.
+
+        Returns None (allocating nothing) if the pool can't satisfy it —
+        the scheduler must defer the request."""
+        if self.num_free() < n:
+            return None
+        out: List[int] = []
+        for _ in range(n):
+            if self.free:
+                slot = self.free.pop()
+            else:
+                slot = self.policy.evict(now)
+                assert slot is not None
+                self._erase(slot)
+                self.n_evictions += 1
+            blk = self.blocks[slot]
+            blk.key = None
+            blk.ref_count = 1
+            blk.count = 1.0
+            blk.boost = 1.0
+            blk.last_access = now
+            out.append(slot)
+        return out
+
+    def _erase(self, slot: int) -> None:
+        blk = self.blocks[slot]
+        if blk.key is not None:
+            self.evicted_positions.append(blk.block_pos)
+            self.table.pop(blk.key, None)
+            if self.host_blocks > 0:
+                payload = self.swap_out_fn(slot) if self.swap_out_fn else None
+                self.host_tier[blk.key] = (payload, blk.block_pos)
+                self.host_tier.move_to_end(blk.key)
+                self.n_swap_outs += 1
+                while len(self.host_tier) > self.host_blocks:
+                    self.host_tier.popitem(last=False)      # host LRU
+            blk.key = None
+
+    def commit(self, slot: int, key: int, block_pos: int) -> None:
+        """Register a filled block in the hash table (reusable from now)."""
+        blk = self.blocks[slot]
+        old = self.table.get(key)
+        if old is not None and old != slot:
+            # duplicate content (two requests computed the same block
+            # concurrently): keep the existing mapping
+            return
+        blk.key = key
+        blk.block_pos = block_pos
+        self.table[key] = slot
+
+    def release(self, slots: Sequence[int], now: float) -> None:
+        """Drop one reference from each block; ref==0 -> evictable."""
+        for slot in slots:
+            blk = self.blocks[slot]
+            assert blk.ref_count > 0, slot
+            blk.ref_count -= 1
+            if blk.ref_count == 0:
+                if blk.key is None:
+                    self.free.append(slot)   # never committed: plain free
+                elif now >= blk.pinned_until:
+                    self._make_evictable(slot, now)
+                # else: stays pinned; unpin() will enqueue it
+
+    def _make_evictable(self, slot: int, now: float) -> None:
+        blk = self.blocks[slot]
+        log_cost = self.cost_model.log_block_cost(
+            blk.block_pos * self.block_size, self.block_size)
+        self.policy.add(slot, EvictableMeta(
+            last_access=blk.last_access,
+            log_cost=log_cost + math.log(blk.boost),
+            count=blk.count))
+
+    # ------------------------------------------------------------------
+    # Continuum-style TTL pinning (§5.2 / §6.5)
+    # ------------------------------------------------------------------
+    def pin(self, slots: Sequence[int], until: float) -> None:
+        for slot in slots:
+            blk = self.blocks[slot]
+            blk.pinned_until = max(blk.pinned_until, until)
+            if blk.ref_count == 0 and blk.key is not None:
+                self.policy.remove(slot)
+
+    def unpin_expired(self, now: float) -> None:
+        for blk in self.blocks:
+            if blk.pinned_until > -math.inf and now >= blk.pinned_until:
+                blk.pinned_until = -math.inf
+                if blk.ref_count == 0 and blk.key is not None and \
+                        blk.slot not in self.policy:
+                    self._make_evictable(blk.slot, now)
+
+    def swap_in(self, key: int, slot: int, block_pos: int,
+                now: float) -> bool:
+        """Restore a host-tier block into device slot ``slot`` (paper §7).
+        Returns True when the payload was copied (engine attached)."""
+        payload, _pos = self.host_tier.pop(key)
+        if self.swap_in_fn is not None and payload is not None:
+            self.swap_in_fn(slot, payload)
+        self.commit(slot, key, block_pos)
+        self.n_swap_ins += 1
+        return payload is not None
+
+    def earliest_pin_expiry(self, now: float) -> Optional[float]:
+        times = [b.pinned_until for b in self.blocks
+                 if b.pinned_until > now]
+        return min(times) if times else None
+
+    def set_boost(self, slots: Sequence[int], boost: float) -> None:
+        """Agentic correction factor (§5.2): tool-call-pending blocks."""
+        for slot in slots:
+            self.blocks[slot].boost = boost
+
+    # ------------------------------------------------------------------
+    def hit_rate(self) -> float:
+        return self.n_hits / max(self.n_lookups, 1)
+
+    def resident_tokens(self) -> int:
+        return len(self.table) * self.block_size

@@ -1,0 +1,41 @@
+"""Online lifespan estimation and λ adaptation (paper §5.1, Eq. 10).
+
+A sliding window of observed block-reuse intervals feeds a periodic update
+
+    λ_new = exp( (τ̂ − τ0)/β − τ̂/α )
+
+which shifts the piecewise-exponential turning point to the detected
+lifespan τ̂ with **zero** data-structure cost: λ is a scalar multiplier in
+the EVICT comparison only (Algorithm 1, line 8).
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Deque, Optional
+
+from repro.core.freq import FreqParams
+
+
+class LifespanTracker:
+    def __init__(self, freq: FreqParams, window: int = 512,
+                 percentile: float = 0.99, update_every: int = 64):
+        self.freq = freq
+        self.window: Deque[float] = deque(maxlen=window)
+        self.percentile = percentile
+        self.update_every = update_every
+        self._since_update = 0
+        self.log_lambda = 0.0
+
+    def observe_reuse(self, interval: float) -> Optional[float]:
+        """Record a block-reuse interval; returns new ln λ when updated."""
+        self.window.append(max(interval, 1e-9))
+        self._since_update += 1
+        if self._since_update < self.update_every or len(self.window) < 16:
+            return None
+        self._since_update = 0
+        xs = sorted(self.window)
+        idx = min(len(xs) - 1, int(self.percentile * len(xs)))
+        tau_hat = xs[idx]
+        self.log_lambda = self.freq.log_lambda_for_lifespan(tau_hat)
+        return self.log_lambda

@@ -1,0 +1,112 @@
+"""Cross-chip flash-decoding: decode attention over a sequence-sharded KV
+cache, combined with the numerically exact log-sum-exp merge.
+
+This is the distributed generalization of Multi-Segment Attention: each
+chip's KV shard is one "segment"; per-shard partials (o_i, lse_i) merge as
+
+    m = max_i lse_i;   out = Σ_i e^{lse_i - m}·o_i / Σ_i e^{lse_i - m}
+
+via one psum over the sequence-sharding axes.  Replicated-KV callers
+(whisper cross-attention) degenerate gracefully: identical partials merge
+to themselves.
+
+Collectives per layer: pmax + 2-term psum over the kv_seq axes (tiny:
+(B, H, D) + (B, H)) — this is why sequence-sharding beats head-sharding
+for long-context decode in the roofline's collective term.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import context as ctx
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _local_partial(q, k, v, start, kv_len, window, softcap):
+    """Partial attention over a local KV shard.
+
+    q: (B, H, D); k/v: (B, S_loc, KH, D); start: global index of this
+    shard's first position.  Returns (o (B,H,D) f32, lse (B,H) f32)."""
+    b, s_loc, kh, d = k.shape
+    h = q.shape[1]
+    n_rep = h // kh
+    scale = 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32).reshape(b, kh, n_rep, d) * scale
+    # NOTE: no k.astype(f32) — that would materialize the full KV shard in
+    # fp32 (2x HBM traffic at decode, which is KV-read bound).  The MXU
+    # accumulates in fp32 via preferred_element_type (§Perf iteration C).
+    s_ = jnp.einsum("bgrd,bsgd->bgrs", qf.astype(k.dtype), k,
+                    preferred_element_type=jnp.float32)
+    if softcap and softcap > 0:
+        s_ = softcap * jnp.tanh(s_ / softcap)
+    gpos = start + jnp.arange(s_loc, dtype=jnp.int32)          # global pos
+    mask = gpos[None, None, None, :] < kv_len[:, None, None, None]
+    if window is not None:
+        weff = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window),
+                         jnp.iinfo(jnp.int32).max // 2)
+        mask = mask & (gpos[None, None, None, :]
+                       >= kv_len[:, None, None, None] - weff)
+    s_ = jnp.where(mask, s_, NEG_INF)
+    m = jnp.max(s_, axis=-1)                                   # (B,KH,R)
+    p = jnp.exp(s_ - m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bgrs,bsgd->bgrd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    # normalize o to the "softmax numerator / l" form for stable merging
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return o.reshape(b, h, d), lse.reshape(b, h)
+
+
+def sharded_decode_attention(q: jax.Array, k_cache: jax.Array,
+                             v_cache: jax.Array, kv_len: jax.Array,
+                             *, window=None, softcap: float = 0.0) -> jax.Array:
+    """q: (B,H,D); k/v_cache: (B,S,KH,D) with S sharded over the context's
+    ``kv_seq`` axes and B over the ``batch`` axes."""
+    dc = ctx.current()
+    assert dc is not None
+    mesh = dc.mesh
+    seq_axes = dc.rules.get("kv_seq")           # e.g. "model" or ("data","model")
+    batch_axes = dc.rules.get("batch")
+    if seq_axes is None:
+        from repro.models.layers import decode_attention
+        return decode_attention(q, k_cache, v_cache, kv_len, window=window,
+                                softcap=softcap)
+    seq_tuple = (seq_axes,) if isinstance(seq_axes, str) else tuple(seq_axes)
+    n_shards = 1
+    for a in seq_tuple:
+        n_shards *= mesh.shape[a]
+    s_total = k_cache.shape[1]
+    # non-divisible KV length (whisper cross-attention, 1500 frames):
+    # keep the cache replicated over the seq axes; identical partials
+    # merge to themselves through the lse combine.
+    replicated = (s_total % n_shards) != 0
+    s_loc = s_total if replicated else s_total // n_shards
+
+    q_spec = P(batch_axes, None, None)
+    kv_spec = P(batch_axes, None if replicated else seq_axes, None, None)
+    len_spec = P(batch_axes)
+
+    def local_fn(ql, kl, vl, lenl):
+        # shard index along the flattened seq axes
+        idx = 0 if replicated else jax.lax.axis_index(seq_tuple)
+        start = idx * s_loc
+        o, lse = _local_partial(ql, kl, vl, start, lenl, window, softcap)
+        m = jax.lax.pmax(lse, seq_tuple)
+        w = jnp.exp(lse - m)
+        o_sum = jax.lax.psum(o * w[..., None], seq_tuple)
+        w_sum = jax.lax.psum(w, seq_tuple)
+        return (o_sum / jnp.maximum(w_sum, 1e-30)[..., None]).astype(q.dtype)
+
+    return jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(q_spec, kv_spec, kv_spec, len_spec),
+        out_specs=q_spec,
+    )(q, k_cache, v_cache, kv_len)

@@ -1,0 +1,237 @@
+"""Per-architecture sharding policies (DESIGN.md §4).
+
+``sharding_rules(cfg, mesh, kind)`` maps *logical* axis names (used by
+``param_axes`` and activation ``constrain`` calls) to mesh axes, per
+architecture family and execution kind (train / prefill / decode).
+
+``effective_config`` applies hardware adaptation that changes shapes:
+  * q-head padding to the TP degree where replication would be too large
+    (llava-next-34b: 56 -> 64 heads);
+  * vocab padding to a multiple of 256 so the vocab/logits dim shards
+    (granite 49155 -> 49408, etc.), with loss masking of padded slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.context import DistContext
+from repro.models.model import param_axes
+
+
+# ---------------------------------------------------------------------------
+# Shape-changing hardware adaptation
+# ---------------------------------------------------------------------------
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def effective_config(cfg: ModelConfig, tp: int = 16,
+                     ep: int = 16) -> ModelConfig:
+    changes: Dict[str, Any] = {}
+    # vocab padding so the logits dim shards over `model`
+    if cfg.vocab_size % (tp * 16):
+        changes["vocab_size"] = _round_up(cfg.vocab_size, tp * 16)
+        changes["real_vocab"] = cfg.vocab_size
+    # q-head padding when heads don't divide TP and the attention params are
+    # too large to replicate (> ~2 GB bf16)
+    if cfg.n_heads and cfg.n_heads % tp:
+        attn_bytes = (2 * cfg.d_model * cfg.n_heads * cfg.head_dim
+                      * cfg.n_layers * 2)
+        if attn_bytes > 2e9:
+            changes["n_heads"] = _round_up(cfg.n_heads, tp)
+    # virtual expert column-split so the expert dim divides the EP axis
+    # (grok: 8 x 32768 -> 16 x 16384; exact SwiGLU decomposition)
+    if cfg.moe is not None and cfg.moe.num_experts % ep:
+        if ep % cfg.moe.num_experts == 0:
+            split = ep // cfg.moe.num_experts
+            changes["moe"] = dataclasses.replace(
+                cfg.moe, num_experts=cfg.moe.num_experts * split,
+                expert_split=cfg.moe.expert_split * split)
+            changes["d_ff"] = cfg.d_ff // split
+    if changes:
+        return dataclasses.replace(cfg, **changes)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+def sharding_rules(cfg: ModelConfig, mesh: Mesh, kind: str,
+                   batch_size: int = 0) -> Dict[str, Any]:
+    """Logical-axis -> mesh-axes map for (arch family x execution kind)."""
+    tp = mesh.shape["model"]
+    dp = mesh.shape["data"]
+    has_pod = "pod" in mesh.shape
+    batch_axes: Any = ("pod", "data") if has_pod else "data"
+    dp_total = dp * (mesh.shape["pod"] if has_pod else 1)
+    if batch_size and batch_size % dp_total:
+        # long_500k: global_batch=1 cannot shard; replicate batch and give
+        # the freed axes to the KV sequence dim
+        batch_axes = None
+
+    div = lambda n: (n % tp == 0)
+
+    rules: Dict[str, Any] = {
+        "batch": batch_axes,
+        "heads": "model" if div(cfg.n_heads or tp) else None,
+        "kv_heads": "model" if div(cfg.n_kv_heads or tp) else None,
+        "ffn": "model" if div(cfg.d_ff or tp) else None,
+        "vocab": "model" if div(cfg.vocab_size) else None,
+        "ssm_inner": None,
+        "ssm_heads": None,
+        "experts": None,
+        "expert_fsdp": None,
+        "expert_ffn": None,
+        "fsdp": None,
+        "kv_seq": None,
+        "seq_sp": "model",
+    }
+
+    if cfg.ssm is not None:
+        di = cfg.ssm.d_inner(cfg.d_model)
+        in_proj_cols = 2 * di + 2 * cfg.ssm.n_groups * cfg.ssm.d_state + \
+            cfg.ssm.n_heads(cfg.d_model)
+        rules["ssm_inner"] = "model" if (di % tp == 0
+                                         and in_proj_cols % tp == 0) else None
+        rules["ssm_heads"] = "model" if cfg.ssm.n_heads(cfg.d_model) % tp == 0 \
+            else None
+
+    if cfg.moe is not None:
+        # experts over (pod, data) (EP spans pods on the multi-pod mesh so
+        # 1T-scale expert params/grads halve per chip) + expert FFN over
+        # model (TP-within-expert).  grok's 8 experts are virtually
+        # column-split to the EP degree (effective_config).
+        ep_axes = ("pod", "data") if has_pod else "data"
+        ep_total = dp * (mesh.shape["pod"] if has_pod else 1)
+        rules["experts"] = ep_axes if cfg.moe.num_experts % ep_total == 0 \
+            else "data"
+        rules["expert_ffn"] = "model" if div(cfg.d_ff) else None
+
+    # NOTE on FSDP ("fsdp" stays None): probing showed GSPMD lowers the
+    # batch@data x weight-d_model@data contraction by ALL-GATHERING the
+    # full-batch activations (4.3 GB/layer at 6B scale) instead of the
+    # ~0.4 GB weights — 10x the wire bytes of plain TP+DP.  Dense params
+    # + optimizer state fit in TP16 HBM for every assigned arch once the
+    # >=30B configs use Adafactor, so parameters are sharded over `model`
+    # only and gradients all-reduce over `data` (see EXPERIMENTS.md §Perf
+    # iteration log).
+    if kind == "decode":
+        # sequence-sharded KV + cross-chip flash decoding
+        if batch_axes is None:
+            rules["kv_seq"] = ("pod", "data", "model") if has_pod \
+                else ("data", "model")
+        else:
+            rules["kv_seq"] = "model"
+    return rules
+
+
+def dist_flags(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    flags: Dict[str, Any] = {}
+    if cfg.moe is not None:
+        flags["moe_alltoall"] = True
+    if kind == "decode" and cfg.family != "ssm":
+        flags["flash_decode"] = True
+    if kind == "prefill":
+        flags["attn_chunk"] = 512
+    if kind in ("train", "prefill"):
+        # banded flash attention: static kv-tile skipping outside the
+        # causal band / sliding window (§Perf iteration A)
+        flags["banded_attention"] = True
+        # NOTE seq_parallel (Megatron-SP residual) was tried and REFUTED:
+        # GSPMD does not reassociate AR -> RS+AG here; it kept the
+        # all-reduces and added 3 GB/step of gathers (§Perf log).
+        # block-boundary barrier keeps the model-axis all-reduces in bf16
+        # instead of letting XLA hoist the norm's f32 upcast across them
+        if os.environ.get("REPRO_AR_BARRIER", "0") == "1":
+            flags["ar_barrier"] = True
+        if os.environ.get("REPRO_SEQ_PARALLEL", "0") == "1":
+            flags["seq_parallel"] = True
+    return flags
+
+
+def make_context(cfg: ModelConfig, mesh: Mesh, kind: str,
+                 batch_size: int = 0) -> DistContext:
+    return DistContext(mesh=mesh,
+                       rules=sharding_rules(cfg, mesh, kind, batch_size),
+                       flags=dist_flags(cfg, kind))
+
+
+# ---------------------------------------------------------------------------
+# Sharding pytrees
+# ---------------------------------------------------------------------------
+
+def _resolve(axes: Tuple, rules: Dict) -> P:
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, rules: Dict) -> Any:
+    axes_tree = param_axes(cfg)
+    return jax.tree_util.tree_map(
+        lambda axes: NamedSharding(mesh, _resolve(axes, rules)),
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def opt_shardings(opt_name: str, cfg: ModelConfig, mesh: Mesh,
+                  rules: Dict) -> Any:
+    """Optimizer state shardings mirror the parameter axes.
+
+    AdamW m/v share the param's axes; Adafactor vr drops the last axis,
+    vc drops the second-to-last."""
+    axes_tree = param_axes(cfg)
+    is_axes = lambda x: isinstance(x, tuple)
+    if opt_name == "adamw":
+        one = jax.tree_util.tree_map(
+            lambda axes: NamedSharding(mesh, _resolve(axes, rules)),
+            axes_tree, is_leaf=is_axes)
+        return {"m": one, "v": one}
+    if opt_name == "adafactor":
+        def per_leaf(axes):
+            if len(axes) >= 2:
+                return {
+                    "vr": NamedSharding(mesh, _resolve(axes[:-1], rules)),
+                    "vc": NamedSharding(
+                        mesh, _resolve(axes[:-2] + axes[-1:], rules)),
+                }
+            return {"v": NamedSharding(mesh, _resolve(axes, rules))}
+        return jax.tree_util.tree_map(per_leaf, axes_tree, is_leaf=is_axes)
+    raise ValueError(opt_name)
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, rules: Dict,
+                    batch: Dict) -> Dict:
+    b = rules.get("batch")
+    out = {}
+    for k, v in batch.items():
+        out[k] = NamedSharding(mesh, P(b, *([None] * (len(v.shape) - 1))))
+    return out
+
+
+def decode_state_shardings(cfg: ModelConfig, mesh: Mesh, rules: Dict,
+                           state: Dict) -> Dict:
+    b = rules.get("batch")
+    seq = rules.get("kv_seq")
+    out = {}
+    for k, v in state.items():
+        if k in ("k", "v"):                  # (L, B, S, KH, D)
+            out[k] = NamedSharding(mesh, P(None, b, seq, None, None))
+        elif k in ("xk", "xv"):              # (L, B, enc_len, KH, D) replicated seq
+            out[k] = NamedSharding(mesh, P(None, b, None, None, None))
+        elif k == "conv":                    # (L, B, K-1, conv_dim)
+            out[k] = NamedSharding(mesh, P(None, b, None, None))
+        elif k == "ssm":                     # (L, B, H, P, N)
+            out[k] = NamedSharding(mesh, P(None, b, None, None, None))
+        elif k == "pos":
+            out[k] = NamedSharding(mesh, P(b))
+        else:
+            out[k] = NamedSharding(mesh, P(*([None] * len(v.shape))))
+    return out

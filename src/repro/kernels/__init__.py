@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the paper's compute hot-spot: Multi-Segment
+# Attention (prefill over non-contiguous paged KV + paged flash-decode).
+# Each kernel ships with ops.py (jit'd dispatch) and ref.py (pure-jnp
+# oracle); tests sweep shapes/dtypes in interpret=True mode on CPU.

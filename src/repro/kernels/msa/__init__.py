@@ -1,0 +1,3 @@
+from repro.kernels.msa.ops import msa_decode, msa_prefill, write_kv_pages
+
+__all__ = ["msa_decode", "msa_prefill", "write_kv_pages"]

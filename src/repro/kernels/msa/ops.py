@@ -1,0 +1,52 @@
+"""Jit'd dispatch wrappers for the MSA kernels.
+
+``impl`` selects the backend:
+  * "pallas"            — compiled Pallas (TPU)
+  * "pallas_interpret"  — Pallas interpreter (CPU validation)
+  * "xla"               — pure-jnp oracle (CPU serving / dry-run lowering)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.msa import ref
+from repro.kernels.msa.msa_decode import msa_decode_pallas
+from repro.kernels.msa.msa_prefill import msa_prefill_pallas
+
+DEFAULT_IMPL = "xla"  # CPU container default; TPU deployments use "pallas"
+
+
+def msa_prefill(q, k_pages, v_pages, block_tables, context_lens, q_pos,
+                q_lens, *, window: int = 0, softcap: float = 0.0,
+                q_tile: int = 128, impl: str = DEFAULT_IMPL) -> jax.Array:
+    if impl == "xla":
+        return ref.msa_prefill_ref(q, k_pages, v_pages, block_tables,
+                                   context_lens, q_pos, q_lens,
+                                   window=window, softcap=softcap)
+    interpret = impl == "pallas_interpret"
+    qp = q.shape[1]
+    q_tile = min(q_tile, qp)
+    if qp % q_tile:
+        raise ValueError(f"QP={qp} not a multiple of q_tile={q_tile}")
+    return msa_prefill_pallas(q, k_pages, v_pages, block_tables, context_lens,
+                              q_pos, q_lens, window=window, softcap=softcap,
+                              q_tile=q_tile, interpret=interpret)
+
+
+def msa_decode(q, k_pages, v_pages, block_tables, context_lens, *,
+               window: int = 0, softcap: float = 0.0,
+               impl: str = DEFAULT_IMPL) -> jax.Array:
+    if impl == "xla":
+        return ref.msa_decode_ref(q, k_pages, v_pages, block_tables,
+                                  context_lens, window=window, softcap=softcap)
+    interpret = impl == "pallas_interpret"
+    return msa_decode_pallas(q, k_pages, v_pages, block_tables, context_lens,
+                             window=window, softcap=softcap,
+                             interpret=interpret)
+
+
+write_kv_pages = ref.write_kv_pages

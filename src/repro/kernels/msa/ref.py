@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for the Multi-Segment Attention kernels.
+
+These define the exact contract both Pallas kernels implement:
+
+Paged KV layout: ``k_pages``/``v_pages`` are (P, page, KH, D) pools.  A
+request's logical KV space is mapped to pool pages through its row of
+``block_tables`` (R, NP): logical block j lives in pool page
+``block_tables[r, j]``.  *Multi-segment* contexts need no special casing —
+non-contiguity exists only in pool-slot space; logical positions stay
+dense, and the causal mask compares logical positions.  Gaps being
+recomputed have had their K/V written into freshly allocated pages before
+the attention call, so attention always reads a fully materialized context.
+
+MSA prefill: q is (R, QP, H, D) — each request's *compute* tokens (padded
+to QP).  ``q_pos`` (R, QP) gives each compute token's logical position —
+these may be non-contiguous runs (the chunk can span several cache gaps).
+
+Decode: q is (B, H, D), one new token per sequence at logical position
+``context_lens[b] - 1``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _gather_kv(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """(P, page, KH, D), (R, NP) -> (R, NP*page, KH, D)."""
+    r, np_ = block_tables.shape
+    p, page, kh, d = pages.shape
+    out = pages[block_tables]            # (R, NP, page, KH, D)
+    return out.reshape(r, np_ * page, kh, d)
+
+
+def msa_prefill_ref(
+    q: jax.Array,              # (R, QP, H, D)
+    k_pages: jax.Array,        # (P, page, KH, D)
+    v_pages: jax.Array,        # (P, page, KH, D)
+    block_tables: jax.Array,   # (R, NP) int32
+    context_lens: jax.Array,   # (R,) int32 — total logical kv length
+    q_pos: jax.Array,          # (R, QP) int32 logical position per q token
+    q_lens: jax.Array,         # (R,) int32 valid q rows
+    *,
+    window: int = 0,           # 0 = full causal
+    softcap: float = 0.0,
+) -> jax.Array:
+    r, qp, h, d = q.shape
+    kh = k_pages.shape[2]
+    n_rep = h // kh
+    scale = 1.0 / math.sqrt(d)
+
+    k = _gather_kv(k_pages, block_tables)   # (R, S, KH, D)
+    v = _gather_kv(v_pages, block_tables)
+    s_len = k.shape[1]
+
+    kf = jnp.repeat(k, n_rep, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, n_rep, axis=2).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * scale
+
+    scores = jnp.einsum("rqhd,rshd->rhqs", qf, kf)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+
+    kv_pos = jnp.arange(s_len, dtype=jnp.int32)
+    mask = kv_pos[None, None, None, :] < context_lens[:, None, None, None]
+    rel = q_pos[:, None, :, None] - kv_pos[None, None, None, :]
+    mask = mask & (rel >= 0)
+    if window > 0:
+        mask = mask & (rel < window)
+    qvalid = (jnp.arange(qp, dtype=jnp.int32)[None, :] < q_lens[:, None])
+    mask = mask & qvalid[:, None, :, None]
+
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(mask, p, 0.0)             # fully-masked rows -> 0
+    out = jnp.einsum("rhqs,rshd->rqhd", p, vf)
+    return out.astype(q.dtype)
+
+
+def msa_decode_ref(
+    q: jax.Array,              # (B, H, D)
+    k_pages: jax.Array,        # (P, page, KH, D)
+    v_pages: jax.Array,        # (P, page, KH, D)
+    block_tables: jax.Array,   # (B, NP)
+    context_lens: jax.Array,   # (B,) — includes the new token
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    b, h, d = q.shape
+    q_pos = (context_lens - 1)[:, None]
+    out = msa_prefill_ref(
+        q[:, None], k_pages, v_pages, block_tables, context_lens,
+        q_pos, jnp.ones((b,), jnp.int32), window=window, softcap=softcap)
+    return out[:, 0]
+
+
+def write_kv_pages(
+    k_pages: jax.Array,        # (P, page, KH, D)
+    v_pages: jax.Array,
+    k_new: jax.Array,          # (T, KH, D)
+    v_new: jax.Array,
+    slot_ids: jax.Array,       # (T,) int32 — pool page per new token
+    slot_offsets: jax.Array,   # (T,) int32 — offset within page
+    valid: jax.Array,          # (T,) bool
+):
+    """Scatter freshly computed K/V into the paged pool (pre-attention).
+
+    Invalid (padding) rows are routed out of range and dropped by the
+    scatter itself — no read-modify-write, stays a pure scatter."""
+    p = k_pages.shape[0]
+    oob = jnp.where(valid, slot_ids, p)     # out-of-range -> dropped
+    k_pages = k_pages.at[oob, slot_offsets].set(k_new, mode="drop")
+    v_pages = v_pages.at[oob, slot_offsets].set(v_new, mode="drop")
+    return k_pages, v_pages

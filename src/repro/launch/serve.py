@@ -1,0 +1,67 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Runs the AsymCache serving stack either for real (reduced model, CPU) or
+in discrete-event mode at full scale.  On a TPU deployment the same entry
+point selects ``attn_impl=pallas`` and the production mesh.
+"""
+import argparse
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, scaled_config
+from repro.core import TPU_V5E, analytic_cost_model
+from repro.models import init_params
+from repro.serving import (
+    AsymCacheServer,
+    SchedulerConfig,
+    ServerConfig,
+    WorkloadConfig,
+    multi_turn_workload,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama31-8b",
+                    choices=list(ARCH_IDS) + ["llama31-8b", "llama31-70b"])
+    ap.add_argument("--policy", default="asymcache")
+    ap.add_argument("--mode", default="real", choices=["real", "sim"])
+    ap.add_argument("--sessions", type=int, default=4)
+    ap.add_argument("--blocks", type=int, default=64)
+    ap.add_argument("--attn-impl", default="xla",
+                    choices=["xla", "pallas", "pallas_interpret"])
+    args = ap.parse_args()
+
+    if args.mode == "real":
+        cfg = scaled_config(get_smoke_config(args.arch), dtype="float32")
+        assert cfg.family in ("dense", "moe"), \
+            f"{args.arch}: engine serves token LMs (DESIGN.md §5)"
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        wl = multi_turn_workload(WorkloadConfig(
+            n_sessions=args.sessions, first_ctx_len=(96, 200),
+            output_len=(16, 40), qps=1.0))
+        srv = AsymCacheServer(cfg, params, ServerConfig(
+            policy=args.policy, num_blocks=args.blocks, block_size=16,
+            clock="wall",
+            scheduler=SchedulerConfig(token_budget=128, max_chunk=64,
+                                      max_prefills=2, max_decodes=8)))
+    else:
+        cfg = get_config(args.arch)
+        cm = analytic_cost_model(cfg, TPU_V5E, n_chips=256)
+        wl = multi_turn_workload(WorkloadConfig(
+            n_sessions=args.sessions, first_ctx_len=(8_000, 24_000),
+            output_len=(400, 1200), vocab=min(cfg.vocab_size, 50_000),
+            qps=0.05))
+        srv = AsymCacheServer(cfg, None, ServerConfig(
+            policy=args.policy, num_blocks=args.blocks * 512, block_size=16,
+            clock="model", execute_model=False,
+            scheduler=SchedulerConfig(token_budget=4096, max_chunk=2048,
+                                      max_prefills=4, max_decodes=64)),
+            cost_model=cm, sim_cost_model=cm)
+    res = srv.run(wl)
+    for k, v in res.items():
+        print(f"{k}: {v:.4f}" if isinstance(v, float) else f"{k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

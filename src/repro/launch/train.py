@@ -1,0 +1,43 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+CPU container: trains the reduced (smoke) config for real.  With
+``--dry-run`` it instead lowers the full-scale distributed train step on
+the production mesh (same path as repro.launch.dryrun).
+"""
+import argparse
+
+from repro.configs import ARCH_IDS, get_smoke_config, scaled_config
+from repro.training import DataConfig, TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--dry-run", action="store_true")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        from repro.launch import dryrun
+        dryrun.run_cell(args.arch, "train_4k", multi_pod=False, force=True)
+        return
+
+    cfg = scaled_config(get_smoke_config(args.arch), dtype="float32")
+    tr = Trainer(cfg,
+                 TrainConfig(steps=args.steps, ckpt_every=25,
+                             ckpt_dir=args.ckpt_dir,
+                             grad_accum=args.grad_accum),
+                 DataConfig(seq_len=args.seq, global_batch=args.batch))
+    start = tr.init_or_resume()
+    hist = tr.run()
+    losses = [h["loss"] for h in hist if "loss" in h]
+    print(f"{args.arch}: steps {start}->{tr.step} "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+from repro.models.model import (
+    abstract_params,
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    param_axes,
+    prep_cross_attention,
+)
+
+__all__ = [
+    "abstract_params", "decode_step", "forward", "init_decode_state",
+    "init_params", "loss_fn", "param_axes", "prep_cross_attention",
+]

@@ -1,0 +1,14 @@
+from repro.roofline.analysis import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    RooflineTerms,
+    model_flops,
+    roofline,
+)
+from repro.roofline.hlo import parse_collectives, total_wire_bytes
+
+__all__ = [
+    "HBM_BW", "ICI_BW", "PEAK_FLOPS", "RooflineTerms", "model_flops",
+    "roofline", "parse_collectives", "total_wire_bytes",
+]

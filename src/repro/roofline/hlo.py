@@ -1,0 +1,116 @@
+"""Optimized-HLO parsing: per-device collective wire bytes.
+
+``compiled.as_text()`` is the post-SPMD per-device module; collective
+operand shapes there are *shard* sizes.  We build a def-map from every
+``%name = dtype[shape]`` line, then for each collective op sum its
+operands and convert to wire bytes with the standard ring-algorithm
+factors:
+
+    all-gather        out x (n-1)/n       (received bytes)
+    all-reduce        2 x in x (n-1)/n    (reduce-scatter + all-gather)
+    reduce-scatter    in x (n-1)/n
+    all-to-all        in x (n-1)/n
+    collective-permute in
+
+``n`` is the replica-group size parsed from ``replica_groups=[g,n]<=[N]``
+(iota) or explicit ``{{...}}`` lists.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of one (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+def _result_type(rhs: str) -> str:
+    """The type part of an instruction RHS (up to the op name)."""
+    # rhs looks like: "bf16[8,128]{1,0} all-gather(...)" or "(f32[],f32[]) all-reduce(...)"
+    m = re.match(r"^(\([^)]*\)|\S+)\s", rhs)
+    return m.group(1) if m else ""
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {kind: {"wire_bytes": b, "count": c}} (per device)."""
+    defs: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            defs[m.group(1)] = _result_type(m.group(2))
+
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"wire_bytes": 0.0, "count": 0})
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        opm = re.search(r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                        r"collective-permute)(?:-start|-done)?\(", rhs)
+        if not opm:
+            continue
+        kind = opm.group(1)
+        if "-done(" in rhs:
+            continue  # count the -start only (async pairs)
+        # operand bytes: prefer inline types, else def-map lookup
+        paren = rhs[rhs.index("("):]
+        operand_names = re.findall(r"%([\w\.\-]+)", paren)
+        in_bytes = sum(_shape_bytes(defs.get(nm, "")) for nm in operand_names)
+        if in_bytes == 0:
+            in_bytes = _shape_bytes(paren)
+        out_bytes = _shape_bytes(_result_type(rhs))
+        n = _group_size(line, default=2)
+        frac = (n - 1) / max(n, 1)
+        if kind == "all-gather":
+            wire = out_bytes * frac
+        elif kind == "all-reduce":
+            wire = 2 * in_bytes * frac
+        elif kind == "reduce-scatter":
+            wire = in_bytes * frac
+        elif kind == "all-to-all":
+            wire = in_bytes * frac
+        else:  # collective-permute
+            wire = in_bytes
+        out[kind]["wire_bytes"] += wire
+        out[kind]["count"] += 1
+    return dict(out)
+
+
+def total_wire_bytes(collectives: Dict[str, Dict[str, float]]) -> float:
+    return sum(v["wire_bytes"] for v in collectives.values())

@@ -1,0 +1,23 @@
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.request import Request, RequestState, SessionStats
+from repro.serving.scheduler import (
+    ChunkingScheduler,
+    PrefillChunk,
+    SchedulerConfig,
+    StepPlan,
+)
+from repro.serving.server import AsymCacheServer, ServerConfig, reference_logits
+from repro.serving.workload import (
+    AgenticConfig,
+    WorkloadConfig,
+    agentic_workload,
+    multi_turn_workload,
+)
+
+__all__ = [
+    "Engine", "EngineConfig", "Request", "RequestState", "SessionStats",
+    "ChunkingScheduler", "PrefillChunk", "SchedulerConfig", "StepPlan",
+    "AsymCacheServer", "ServerConfig", "reference_logits",
+    "AgenticConfig", "WorkloadConfig", "agentic_workload",
+    "multi_turn_workload",
+]

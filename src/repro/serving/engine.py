@@ -1,0 +1,189 @@
+"""Inference engine: one jitted device step executing a mixed batch of
+multi-segment prefill chunks and decode tokens (paper §4.1/§5.3).
+
+All prefill chunks and decode rows share one token stream for the
+non-attention layers (paper: "hidden states of two segments can directly
+be concatenated when computing MLP and LayerNorm"), and attention runs as
+two kernel dispatches over the same paged KV pool — the Pallas MSA
+prefill kernel and the paged flash-decode kernel.  Shapes are static
+(padded to the engine's buckets) so the step compiles exactly once.
+
+Engine scope: decoder-only token LMs (dense / MoE / sliding-window mixes).
+SSM-family archs have no evictable KV cache (DESIGN.md §Arch-applicability)
+and are served by the dense decode path in ``repro.models`` instead.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels.msa import msa_decode, msa_prefill, write_kv_pages
+from repro.models.layers import apply_rope, moe_ffn_local, rms_norm, swiglu_mlp
+from repro.models.model import _layer_windows
+from repro.serving.scheduler import StepPlan
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    num_pages: int                 # KV pool pages (= block manager blocks)
+    page_size: int = 16
+    max_prefills: int = 4          # R
+    max_chunk: int = 128           # QP (per-request compute tokens per step)
+    max_decodes: int = 64          # B
+    max_blocks_per_seq: int = 64   # NP
+    attn_impl: str = "xla"         # "xla" | "pallas" | "pallas_interpret"
+    q_tile: int = 128
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, ecfg: EngineConfig, params):
+        assert cfg.family in ("dense", "moe", "vlm"), cfg.family
+        assert not cfg.enc_dec
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.params = params
+        dt = jnp.dtype(cfg.dtype)
+        L = cfg.n_layers
+        self.k_pools = jnp.zeros(
+            (L, ecfg.num_pages, ecfg.page_size, cfg.n_kv_heads, cfg.head_dim), dt)
+        self.v_pools = jnp.zeros_like(self.k_pools)
+        self.windows = [int(w) for w in np.asarray(_layer_windows(cfg, L))]
+        self._step = jax.jit(self._step_impl, donate_argnums=(1, 2))
+        self.steps_executed = 0
+
+    # ------------------------------------------------------------------
+    def _step_impl(self, params, k_pools, v_pools, inp):
+        cfg, e = self.cfg, self.ecfg
+        R, QP, B = e.max_prefills, e.max_chunk, e.max_decodes
+        RQP = R * QP
+        x = params["embed"][inp["tokens"]]          # (T, d)
+        pos = inp["positions"]
+
+        qpos_pre = pos[:RQP].reshape(R, QP)
+        impl = e.attn_impl
+        for l in range(cfg.n_layers):
+            blk = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
+            window = self.windows[l]
+            h = rms_norm(x, blk["attn_norm"], cfg.norm_eps)
+            q = jnp.einsum("td,dhk->thk", h, blk["wq"])
+            k_new = jnp.einsum("td,dhk->thk", h, blk["wk"])
+            v_new = jnp.einsum("td,dhk->thk", h, blk["wv"])
+            if cfg.rope_theta > 0:
+                q = apply_rope(q, pos, cfg.rope_theta)
+                k_new = apply_rope(k_new, pos, cfg.rope_theta)
+            kp, vp = write_kv_pages(
+                k_pools[l], v_pools[l], k_new, v_new,
+                inp["write_slot"], inp["write_off"], inp["valid"])
+            k_pools = k_pools.at[l].set(kp)
+            v_pools = v_pools.at[l].set(vp)
+
+            qp_ = q[:RQP].reshape(R, QP, cfg.n_heads, cfg.head_dim)
+            op = msa_prefill(
+                qp_, kp, vp, inp["bt_pre"], inp["ctx_pre"], qpos_pre,
+                inp["qlens"], window=window, softcap=cfg.attn_logit_softcap,
+                q_tile=min(e.q_tile, QP), impl=impl)
+            od = msa_decode(
+                q[RQP:], kp, vp, inp["bt_dec"], inp["ctx_dec"],
+                window=window, softcap=cfg.attn_logit_softcap, impl=impl)
+            attn = jnp.concatenate(
+                [op.reshape(RQP, cfg.n_heads, cfg.head_dim), od], axis=0)
+            x = x + jnp.einsum("thk,hkd->td", attn, blk["wo"])
+
+            h2 = rms_norm(x, blk["mlp_norm"], cfg.norm_eps)
+            if cfg.moe is not None:
+                y = moe_ffn_local(h2, blk["router"], blk["we1"], blk["we3"],
+                                  blk["we2"], cfg.moe.top_k,
+                                  cfg.moe.capacity_factor,
+                                  dropless=cfg.moe.dropless,
+                                  expert_split=cfg.moe.expert_split)
+            else:
+                y = swiglu_mlp(h2, blk["w1"], blk["w3"], blk["w2"])
+            x = x + y
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = x[inp["sel"]] @ head                # (R+B, V)
+        return logits, k_pools, v_pools
+
+    # ------------------------------------------------------------------
+    def build_inputs(self, plan: StepPlan) -> Dict[str, jax.Array]:
+        """Host-side assembly of the padded device arrays for one step."""
+        e = self.ecfg
+        bs = e.page_size
+        R, QP, B, NP = e.max_prefills, e.max_chunk, e.max_decodes, \
+            e.max_blocks_per_seq
+        T = R * QP + B
+        tokens = np.zeros((T,), np.int32)
+        positions = np.zeros((T,), np.int32)
+        valid = np.zeros((T,), bool)
+        write_slot = np.zeros((T,), np.int32)
+        write_off = np.zeros((T,), np.int32)
+        bt_pre = np.zeros((R, NP), np.int32)
+        ctx_pre = np.zeros((R,), np.int32)
+        qlens = np.zeros((R,), np.int32)
+        bt_dec = np.zeros((B, NP), np.int32)
+        ctx_dec = np.ones((B,), np.int32)
+        sel = np.zeros((R + B,), np.int32)
+
+        assert len(plan.prefills) <= R and len(plan.decodes) <= B
+        for r, chunk in enumerate(plan.prefills):
+            req = chunk.req
+            toks = req.all_tokens
+            n = len(chunk.positions)
+            assert n <= QP, (n, QP)
+            base = r * QP
+            for i, p in enumerate(chunk.positions):
+                tokens[base + i] = toks[p]
+                positions[base + i] = p
+                valid[base + i] = True
+                write_slot[base + i] = req.block_slots[p // bs]
+                write_off[base + i] = p % bs
+            qlens[r] = n
+            ctx_pre[r] = chunk.positions[-1] + 1
+            for b, s in enumerate(req.block_slots[:NP]):
+                bt_pre[r, b] = 0 if s is None else s
+            sel[r] = base + n - 1
+
+        for i, req in enumerate(plan.decodes):
+            p = req.prompt_len + len(req.generated) - 1
+            row = R * QP + i
+            tokens[row] = req.generated[-1]
+            positions[row] = p
+            valid[row] = True
+            write_slot[row] = req.block_slots[p // bs]
+            write_off[row] = p % bs
+            ctx_dec[i] = p + 1
+            for b, s in enumerate(req.block_slots[:NP]):
+                bt_dec[i, b] = 0 if s is None else s
+            sel[R + i] = row
+
+        return {k: jnp.asarray(v) for k, v in dict(
+            tokens=tokens, positions=positions, valid=valid,
+            write_slot=write_slot, write_off=write_off,
+            bt_pre=bt_pre, ctx_pre=ctx_pre, qlens=qlens,
+            bt_dec=bt_dec, ctx_dec=ctx_dec, sel=sel).items()}
+
+    # -- host-tier swaps (paper §7 hierarchical storage) ----------------
+    def swap_out(self, slot: int):
+        """Copy one block's K/V (all layers) device -> host."""
+        return (np.asarray(self.k_pools[:, slot]),
+                np.asarray(self.v_pools[:, slot]))
+
+    def swap_in(self, slot: int, payload) -> None:
+        k, v = payload
+        self.k_pools = self.k_pools.at[:, slot].set(jnp.asarray(k))
+        self.v_pools = self.v_pools.at[:, slot].set(jnp.asarray(v))
+
+    def execute(self, plan: StepPlan) -> np.ndarray:
+        """Run one step; returns logits for the R+B selection rows."""
+        inp = self.build_inputs(plan)
+        logits, self.k_pools, self.v_pools = self._step(
+            self.params, self.k_pools, self.v_pools, inp)
+        self.steps_executed += 1
+        return np.asarray(logits)

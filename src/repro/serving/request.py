@@ -1,0 +1,125 @@
+"""Request / session model for the serving runtime.
+
+Outputs are *scripted* (teacher-forced): the paper fixes output tokens by
+rewriting each decoded token so runs are deterministic and comparable; we
+do the same by forcing the scripted token after computing real logits —
+the compute (and therefore every latency and every KV value) is identical
+to sampling, but runs are reproducible and losslessness is checkable.
+"""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+class RequestState(enum.Enum):
+    WAITING = 0
+    PREFILL = 1
+    DECODE = 2
+    FINISHED = 3
+
+
+@dataclass
+class Request:
+    rid: int
+    session_id: int
+    prompt_tokens: List[int]
+    output_script: List[int]          # forced output tokens
+    arrival: float
+    # agentic metadata (Continuum integration)
+    is_tool_call: bool = False        # output ends in a tool call
+    tool_duration: float = 0.0        # estimated tool execution time (TTL)
+
+    # -- runtime state ------------------------------------------------------
+    state: RequestState = RequestState.WAITING
+    block_slots: List[Optional[int]] = field(default_factory=list)
+    hit_mask: List[bool] = field(default_factory=list)
+    compute_list: List[int] = field(default_factory=list)  # logical positions
+    compute_ptr: int = 0
+    generated: List[int] = field(default_factory=list)
+    # positions computed this step whose logits we need (prefill completion)
+    # -- metrics --------------------------------------------------------------
+    admitted_at: float = math.nan
+    first_token_at: float = math.nan
+    finished_at: float = math.nan
+    n_hit_blocks: int = 0
+    n_total_blocks: int = 0
+    n_swapped: int = 0        # host-tier blocks restored by swap-in
+    # logits at prefill completion (losslessness validation)
+    first_logits: Optional[object] = None
+
+    @property
+    def all_tokens(self) -> List[int]:
+        return self.prompt_tokens + self.generated
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt_tokens)
+
+    @property
+    def target_len(self) -> int:
+        return len(self.prompt_tokens) + len(self.output_script)
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.compute_ptr >= len(self.compute_list)
+
+    @property
+    def decode_done(self) -> bool:
+        return len(self.generated) >= len(self.output_script)
+
+    # -- metrics helpers -----------------------------------------------------
+    @property
+    def ttft(self) -> float:
+        return self.first_token_at - self.arrival
+
+    @property
+    def tpot(self) -> float:
+        n = max(len(self.generated) - 1, 1)
+        return (self.finished_at - self.first_token_at) / n
+
+    @property
+    def job_latency(self) -> float:
+        return self.finished_at - self.arrival
+
+
+@dataclass
+class SessionStats:
+    """Aggregated per-run metrics."""
+    ttfts: List[float] = field(default_factory=list)
+    tpots: List[float] = field(default_factory=list)
+    job_latencies: List[float] = field(default_factory=list)
+    request_hits: int = 0
+    request_lookups: int = 0
+    block_hits: int = 0
+    block_lookups: int = 0
+
+    def record(self, req: Request) -> None:
+        self.ttfts.append(req.ttft)
+        self.tpots.append(req.tpot)
+        self.job_latencies.append(req.job_latency)
+        self.block_hits += req.n_hit_blocks
+        self.block_lookups += req.n_total_blocks
+        self.request_lookups += 1
+        if req.n_hit_blocks > 0:
+            self.request_hits += 1
+
+    def summary(self) -> Dict[str, float]:
+        import numpy as np
+        def _mean(xs):
+            return float(np.mean(xs)) if xs else float("nan")
+        def _p(xs, q):
+            return float(np.percentile(xs, q)) if xs else float("nan")
+        return {
+            "n_requests": len(self.ttfts),
+            "ttft_mean": _mean(self.ttfts),
+            "ttft_p90": _p(self.ttfts, 90),
+            "tpot_mean": _mean(self.tpots),
+            "tpot_p90": _p(self.tpots, 90),
+            "job_latency_mean": _mean(self.job_latencies),
+            "job_latency_p90": _p(self.job_latencies, 90),
+            "block_hit_rate": self.block_hits / max(self.block_lookups, 1),
+            "request_hit_rate": self.request_hits / max(self.request_lookups, 1),
+        }

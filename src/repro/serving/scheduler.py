@@ -1,0 +1,184 @@
+"""Adaptive chunking scheduler (paper §5.1) + continuous batching.
+
+Each scheduling step builds a ``StepPlan`` containing
+  * up to ``max_prefills`` prefill chunks — each chunk is the next run of a
+    request's *compute list* (the logical positions whose KV must be
+    (re)computed), which may span several cache gaps → a genuinely
+    multi-segment chunk handled by one MSA dispatch;
+  * every running decode request (one token each).
+
+Adaptive chunk sizing: when the number of co-scheduled decodes exceeds
+``decode_threshold`` the per-request chunk shrinks (never below
+``min_chunk``) so decode TPOT is protected; prefill total latency is
+roughly unchanged because prefill is compute-bound (§5.1).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core.block_manager import BlockManager
+from repro.serving.request import Request, RequestState
+
+
+@dataclass
+class PrefillChunk:
+    req: Request
+    positions: List[int]          # logical positions computed this step
+    completes_prefill: bool
+
+
+@dataclass
+class StepPlan:
+    prefills: List[PrefillChunk] = field(default_factory=list)
+    decodes: List[Request] = field(default_factory=list)
+
+    @property
+    def n_compute_tokens(self) -> int:
+        return sum(len(c.positions) for c in self.prefills) + len(self.decodes)
+
+    def empty(self) -> bool:
+        return not self.prefills and not self.decodes
+
+
+@dataclass
+class SchedulerConfig:
+    block_size: int = 16
+    token_budget: int = 256          # total compute tokens per step
+    max_prefills: int = 4            # concurrent prefill chunks per step
+    max_chunk: int = 128             # per-request chunk upper bound
+    min_chunk: int = 16              # §5.1 lower bound
+    max_decodes: int = 64
+    decode_threshold: int = 8        # shrink chunks beyond this many decodes
+    adaptive_chunking: bool = True
+    max_running: int = 64
+
+
+class ChunkingScheduler:
+    def __init__(self, cfg: SchedulerConfig, bm: BlockManager):
+        self.cfg = cfg
+        self.bm = bm
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []
+        self.swaps_this_round = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def _admit(self, req: Request, now: float) -> bool:
+        """Match cache, allocate ALL blocks up front, build compute list.
+
+        Full up-front allocation (prompt gaps + decode blocks) makes the
+        loop deadlock-free: a running request never fails allocation.
+        Admission defers while the pool can't supply the gap blocks."""
+        bs = self.cfg.block_size
+        n_prompt_blocks = len(req.prompt_tokens) // bs
+        hashes = getattr(req, "_prompt_hashes", None)
+        if hashes is None:
+            hashes = self.bm.block_hashes(req.prompt_tokens)
+            req._prompt_hashes = hashes
+        m = self.bm.match(req.prompt_tokens, now, hashes=hashes)  # acquires hits
+        total_blocks = (req.target_len + bs - 1) // bs
+        needed = total_blocks - m.num_hits
+        fresh = self.bm.allocate(needed, now)
+        if fresh is None:
+            # undo: drop the acquired hit references, stay waiting
+            self.bm.release([s for s in m.hit_slots if s is not None], now)
+            return False
+        it = iter(fresh)
+        req.block_slots = [
+            (m.hit_slots[b] if b < n_prompt_blocks and m.hit_mask[b]
+             else next(it)) for b in range(total_blocks)]
+        req.hit_mask = list(m.hit_mask)
+        req.n_hit_blocks = m.num_hits
+        req.n_total_blocks = max(n_prompt_blocks, 1)
+
+        # host-tier hits (paper §7): swap the payload back into the freshly
+        # allocated device slot instead of recomputing the block
+        swapped = set()
+        if self.bm.host_blocks > 0:
+            for b in range(n_prompt_blocks):
+                if b < len(m.host_hits) and m.host_hits[b] \
+                        and not m.hit_mask[b]:
+                    self.bm.swap_in(hashes[b], req.block_slots[b], b, now)
+                    req.hit_mask[b] = True
+                    req.n_hit_blocks += 1
+                    swapped.add(b)
+            req.n_swapped = len(swapped)
+            self.swaps_this_round += len(swapped)
+
+        compute = []
+        for p in range(req.prompt_len):
+            b = p // bs
+            if b >= n_prompt_blocks or (not m.hit_mask[b] and b not in swapped):
+                compute.append(p)
+        last = req.prompt_len - 1
+        if not compute or compute[-1] != last:
+            compute.append(last)     # always recompute the sampling position
+        req.compute_list = compute
+        req.compute_ptr = 0
+        req.admitted_at = now
+        req.state = RequestState.PREFILL
+        return True
+
+    # ------------------------------------------------------------------
+    def _chunk_size(self, n_decodes: int, n_prefills: int) -> int:
+        c = self.cfg
+        if not c.adaptive_chunking:
+            return c.max_chunk
+        if n_decodes > c.decode_threshold:
+            # §5.1: many decodes -> shrink prefill chunks, floor at min_chunk
+            shrink = max(1, n_decodes - c.decode_threshold)
+            size = c.max_chunk // (1 + shrink // 4)
+            return max(c.min_chunk, size)
+        return c.max_chunk
+
+    # ------------------------------------------------------------------
+    def schedule(self, now: float) -> StepPlan:
+        plan = StepPlan()
+        c = self.cfg
+        self.swaps_this_round = 0
+
+        # 1. admit waiting requests (arrival order; defer on memory pressure)
+        still_waiting = []
+        for req in self.waiting:
+            if (req.arrival <= now and len(self.running) < c.max_running
+                    and self._admit(req, now)):
+                self.running.append(req)
+            else:
+                still_waiting.append(req)
+        self.waiting = still_waiting
+
+        # 2. decodes first (memory-bound, latency-critical)
+        decodes = [r for r in self.running if r.state == RequestState.DECODE]
+        for req in decodes[:c.max_decodes]:
+            plan.decodes.append(req)
+
+        # 3. prefill chunks under the remaining token budget
+        budget = c.token_budget - len(plan.decodes)
+        chunk = self._chunk_size(len(plan.decodes), 0)
+        prefills = [r for r in self.running if r.state == RequestState.PREFILL]
+        for req in prefills[:c.max_prefills]:
+            if budget <= 0:
+                break
+            take = min(chunk, budget,
+                       len(req.compute_list) - req.compute_ptr)
+            if take <= 0:
+                continue
+            want = req.compute_list[req.compute_ptr:req.compute_ptr + take]
+            req.compute_ptr += len(want)
+            budget -= len(want)
+            plan.prefills.append(PrefillChunk(
+                req=req, positions=want,
+                completes_prefill=req.prefill_done))
+        return plan
+
+    # ------------------------------------------------------------------
+    def finish(self, req: Request, now: float) -> None:
+        req.state = RequestState.FINISHED
+        req.finished_at = now
+        self.running.remove(req)
+        slots = [s for s in req.block_slots if s is not None]
+        self.bm.release(slots, now)

@@ -1,0 +1,286 @@
+"""AsymCache serving loop: discrete-event orchestration of scheduler +
+engine + block manager + evictor (+ optional Continuum TTL layer).
+
+Two clocks:
+  * ``clock="wall"``  — real execution time of the jitted engine steps
+                        (small models on CPU; relative comparisons)
+  * ``clock="model"`` — the fitted/analytic Eq.-6 cost model advances the
+                        simulated clock (paper-scale latencies on Llama
+                        3.1-8B/70B constants) while the engine still runs
+                        for real so losslessness is preserved end to end.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import (
+    BlockManager,
+    CostModel,
+    FreqParams,
+    LifespanTracker,
+    analytic_cost_model,
+    chain_hash,
+    make_policy,
+)
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.request import Request, RequestState, SessionStats
+from repro.serving.scheduler import ChunkingScheduler, SchedulerConfig, StepPlan
+
+
+class _SimEngine:
+    """Engine stand-in for discrete-event simulation (execute_model=False):
+    block/scheduler behaviour is real; logits are zeros."""
+
+    def __init__(self, sched_cfg: SchedulerConfig):
+        class _E:  # minimal ecfg view used by run()/_postprocess
+            pass
+        self.ecfg = _E()
+        self.ecfg.max_prefills = sched_cfg.max_prefills
+        self.steps_executed = 0
+        self._n = sched_cfg.max_prefills + sched_cfg.max_decodes
+
+    def execute(self, plan: StepPlan) -> np.ndarray:
+        self.steps_executed += 1
+        return np.zeros((self._n, 1), np.float32)
+
+
+@dataclass
+class ServerConfig:
+    policy: str = "asymcache"
+    lifespan: float = 30.0
+    reuse_prob: float = 0.5
+    slope_ratio: float = 40.0
+    num_blocks: int = 512
+    block_size: int = 16
+    clock: str = "wall"                 # "wall" | "model"
+    # execute_model=False: discrete-event simulation — the block manager,
+    # evictor and scheduler run for real but the engine is replaced by the
+    # Eq.-6 cost model (paper-scale contexts on CPU).  Losslessness is
+    # validated separately with execute_model=True.
+    execute_model: bool = True
+    online_lifespan: bool = True
+    continuum_ttl: bool = False         # agentic TTL pinning layer
+    tool_boost: float = 8.0             # §5.2 correction factor
+    # hierarchical KV storage (paper §7): evicted blocks spill to a host
+    # tier of this many blocks (0 = off); swap-in replaces recomputation
+    host_blocks: int = 0
+    pcie_bw: float = 1.2e10             # bytes/s host<->device for swaps
+    scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
+    use_hit_count: bool = True
+
+
+class AsymCacheServer:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServerConfig,
+                 ecfg: Optional[EngineConfig] = None,
+                 cost_model: Optional[CostModel] = None,
+                 sim_cost_model: Optional[CostModel] = None):
+        self.cfg = cfg
+        self.scfg = scfg
+        scfg.scheduler.block_size = scfg.block_size
+        self.freq = FreqParams.from_turning_point(
+            scfg.lifespan, scfg.reuse_prob, scfg.slope_ratio)
+        self.cost_model = cost_model or analytic_cost_model(cfg)
+        # clock="model" uses (possibly different, paper-scale) constants
+        self.sim_cost_model = sim_cost_model or self.cost_model
+        policy = make_policy(scfg.policy, self.freq,
+                             **({"use_hit_count": scfg.use_hit_count}
+                                if scfg.policy.startswith("asymcache") else {}))
+        self.bm = BlockManager(scfg.num_blocks, scfg.block_size, policy,
+                               self.cost_model, self.freq,
+                               host_blocks=scfg.host_blocks)
+        self.sched = ChunkingScheduler(scfg.scheduler, self.bm)
+        if scfg.execute_model:
+            ecfg = ecfg or EngineConfig(
+                num_pages=scfg.num_blocks, page_size=scfg.block_size,
+                max_chunk=scfg.scheduler.max_chunk,
+                max_prefills=scfg.scheduler.max_prefills,
+                max_decodes=scfg.scheduler.max_decodes)
+            self.engine = Engine(cfg, ecfg, params)
+            if scfg.host_blocks > 0:
+                self.bm.swap_out_fn = lambda slot: self.engine.swap_out(slot)
+                self.bm.swap_in_fn = lambda slot, pl: self.engine.swap_in(
+                    slot, pl)
+        else:
+            assert scfg.clock == "model", "simulation requires clock='model'"
+            self.engine = _SimEngine(scfg.scheduler)
+        self.lifespan_tracker = LifespanTracker(self.freq) \
+            if scfg.online_lifespan else None
+        self._block_last_release: Dict[int, float] = {}
+        self.stats = SessionStats()
+        self.now = 0.0
+        self.control_plane_time = 0.0
+
+    # ------------------------------------------------------------------
+    def _hashes_for(self, req: Request, n_blocks: int):
+        """Incrementally extended per-request chain-hash cache (O(1)/block)."""
+        hs = getattr(req, "_hash_chain", None)
+        if hs is None:
+            hs = []
+            req._hash_chain = hs
+        if len(hs) < n_blocks:
+            bs = self.scfg.block_size
+            toks = req.all_tokens
+            h = hs[-1] if hs else 0
+            for b in range(len(hs), n_blocks):
+                h = chain_hash(h, tuple(toks[b * bs:(b + 1) * bs]))
+                hs.append(h)
+        return hs[:n_blocks]
+
+    def _commit_ready_blocks(self, req: Request, processed_through: int):
+        """Commit every block fully covered by positions < processed_through."""
+        bs = self.scfg.block_size
+        n_full = processed_through // bs
+        hashes = self._hashes_for(req, n_full)
+        for b in range(n_full):
+            slot = req.block_slots[b]
+            if slot is None:
+                continue
+            blk = self.bm.blocks[slot]
+            if blk.key is None:
+                self.bm.commit(slot, hashes[b], b)
+
+    def _step_latency(self, plan: StepPlan) -> float:
+        """Exact per-token step cost: a compute token at logical position p
+        pays k2 (GEMMs) + k5·min(p, window) (attention over its context).
+        This is Eq. 4's exact form — the evictor still *decides* with the
+        Eq. 6/7 approximation, as in the paper."""
+        cm = self.sim_cost_model
+        k2, k5, k6 = cm.k[1], cm.k[4], cm.k[5]
+        w = cm.eff_window
+        lat = cm.beta
+        for c in plan.prefills:
+            pos_sum = sum(min(p, w) for p in c.positions)
+            lat += k2 * len(c.positions) + k5 * pos_sum
+        for r in plan.decodes:
+            ctx = r.prompt_len + len(r.generated)
+            lat += k2 + k6 * min(ctx, w)
+        if self.sched.swaps_this_round:
+            blk_bytes = (2 * self.cfg.n_layers * self.scfg.block_size
+                         * max(self.cfg.n_kv_heads, 1) * self.cfg.head_dim * 2)
+            lat += self.sched.swaps_this_round * blk_bytes / self.scfg.pcie_bw
+        return lat
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request], max_steps: int = 200_000) -> Dict:
+        """Discrete-event main loop over a scripted workload."""
+        pending = sorted(requests, key=lambda r: r.arrival)
+        next_arrival = 0
+        e = self.engine.ecfg
+        R = e.max_prefills
+        steps = 0
+        t_run0 = time.perf_counter()
+
+        while (next_arrival < len(pending) or self.sched.waiting
+               or self.sched.running) and steps < max_steps:
+            # admit arrivals due by now
+            while (next_arrival < len(pending)
+                   and pending[next_arrival].arrival <= self.now):
+                self._on_arrival(pending[next_arrival])
+                next_arrival += 1
+
+            if self.scfg.continuum_ttl:
+                self.bm.unpin_expired(self.now)
+            t0 = time.perf_counter()
+            plan = self.sched.schedule(self.now)
+            self.control_plane_time += time.perf_counter() - t0
+
+            if plan.empty():
+                # idle: jump to next arrival
+                if next_arrival < len(pending):
+                    self.now = max(self.now, pending[next_arrival].arrival)
+                    continue
+                if self.sched.waiting and not self.sched.running:
+                    expiry = self.bm.earliest_pin_expiry(self.now)
+                    if expiry is not None:    # pinned blocks block admission
+                        self.now = expiry
+                        self.bm.unpin_expired(self.now)
+                        continue
+                    raise RuntimeError(
+                        "KV pool too small for a single waiting request "
+                        f"({self.scfg.num_blocks} blocks)")
+                break
+
+            t1 = time.perf_counter()
+            logits = self.engine.execute(plan)
+            exec_time = time.perf_counter() - t1
+            step_latency = exec_time if self.scfg.clock == "wall" \
+                else self._step_latency(plan)
+            self.now += step_latency
+            steps += 1
+
+            self._postprocess(plan, logits)
+        wall = time.perf_counter() - t_run0
+
+        out = self.stats.summary()
+        out.update({
+            "steps": steps,
+            "wall_time": wall,
+            "control_plane_time": self.control_plane_time,
+            "evictions": self.bm.n_evictions,
+            "swap_ins": self.bm.n_swap_ins,
+            "swap_outs": self.bm.n_swap_outs,
+            "block_hit_rate_manager": self.bm.hit_rate(),
+            "sim_time": self.now,
+        })
+        return out
+
+    # ------------------------------------------------------------------
+    def _on_arrival(self, req: Request) -> None:
+        self.sched.submit(req)
+
+    def _postprocess(self, plan: StepPlan, logits: np.ndarray) -> None:
+        e = self.engine.ecfg
+        R = e.max_prefills
+        for r, chunk in enumerate(plan.prefills):
+            req = chunk.req
+            self._commit_ready_blocks(req, chunk.positions[-1] + 1)
+            if chunk.completes_prefill:
+                req.state = RequestState.DECODE
+                req.first_token_at = self.now
+                req.first_logits = logits[r].copy()
+                req.generated.append(int(req.output_script[0]))
+                if len(req.output_script) <= 1:
+                    self._finish(req)
+        for i, req in enumerate(plan.decodes):
+            p = req.prompt_len + len(req.generated) - 1
+            if (p + 1) % self.scfg.block_size == 0:
+                self._commit_ready_blocks(req, p + 1)
+            req.generated.append(int(req.output_script[len(req.generated)]))
+            if req.decode_done:
+                self._finish(req)
+
+    def _finish(self, req: Request) -> None:
+        # §5.1 online lifespan: feed actual per-block reuse intervals
+        # observed by the block manager into the λ tracker
+        if self.lifespan_tracker is not None and self.bm.reuse_intervals:
+            for iv in self.bm.reuse_intervals:
+                ll = self.lifespan_tracker.observe_reuse(iv)
+                if ll is not None:
+                    self.bm.policy.set_log_lambda(ll)
+            self.bm.reuse_intervals.clear()
+        if self.scfg.continuum_ttl and req.is_tool_call:
+            slots = [s for s in req.block_slots if s is not None]
+            self.bm.pin(slots, until=self.now + req.tool_duration)
+            self.bm.set_boost(slots, self.scfg.tool_boost)
+        self.sched.finish(req, self.now)
+        self.stats.record(req)
+
+
+# ---------------------------------------------------------------------------
+# Reference-output helper for losslessness checks
+# ---------------------------------------------------------------------------
+
+def reference_logits(cfg: ModelConfig, params, tokens: List[int]) -> np.ndarray:
+    """Logits for the last position of ``tokens`` via the dense (non-paged,
+    non-evicting) model path — the ground truth for lossless serving."""
+    import jax.numpy as jnp
+    from repro.models import forward
+    t = jnp.asarray(tokens, jnp.int32)[None]
+    lg = forward(params, cfg, {"tokens": t})
+    return np.asarray(lg[0, -1])

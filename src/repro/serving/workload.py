@@ -1,0 +1,122 @@
+"""Workload generators (paper §6.1): multi-turn conversation sessions with
+Gamma arrivals, and agentic tool-calling sessions (BFCL-like).
+
+Multi-turn: first-turn arrivals follow a Gamma process (CV 0.25); turn
+intervals within a session follow another Gamma process.  The
+inter:intra-session rate ratio controls *dispersion* — 5:1 "low" and
+10:1 "high" per the paper.  Each turn's prompt = shared system prefix +
+full conversation history + new user text; outputs are scripted.
+
+Agentic: tool-call turns with short, predictable intervals
+(tool_duration), deterministic continuation — the Continuum setting.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.serving.request import Request
+
+
+@dataclass
+class WorkloadConfig:
+    n_sessions: int = 12
+    turns_per_session: Tuple[int, int] = (2, 5)
+    system_prefix_len: int = 64            # shared across ALL sessions
+    first_ctx_len: Tuple[int, int] = (128, 512)   # per-session document
+    user_len: Tuple[int, int] = (16, 64)
+    output_len: Tuple[int, int] = (16, 96)
+    vocab: int = 250
+    # arrivals
+    qps: float = 0.5                       # session arrival rate
+    cv: float = 0.25                       # coefficient of variation
+    intra_ratio: float = 5.0               # inter:intra arrival-rate ratio
+    seed: int = 0
+
+
+def _gamma_interval(rng: random.Random, rate: float, cv: float) -> float:
+    """Sample an inter-arrival from a Gamma with mean 1/rate and given CV."""
+    shape = 1.0 / (cv * cv)
+    scale = 1.0 / (rate * shape)
+    return rng.gammavariate(shape, scale)
+
+
+def _tokens(rng: random.Random, n: int, vocab: int) -> List[int]:
+    return [rng.randrange(2, vocab) for _ in range(n)]
+
+
+def multi_turn_workload(cfg: WorkloadConfig) -> List[Request]:
+    rng = random.Random(cfg.seed)
+    system_prefix = _tokens(rng, cfg.system_prefix_len, cfg.vocab)
+    requests: List[Request] = []
+    rid = 0
+    t = 0.0
+    # inter:intra rate ratio (paper §6.1): higher ratio -> turns of one
+    # session arrive RELATIVELY less often -> more foreign requests
+    # interleave between consecutive turns -> higher dispersion
+    intra_rate = cfg.qps / max(cfg.intra_ratio, 1e-9)
+    for sid in range(cfg.n_sessions):
+        t += _gamma_interval(rng, cfg.qps, cfg.cv)
+        history = list(system_prefix) + _tokens(
+            rng, rng.randint(*cfg.first_ctx_len), cfg.vocab)
+        turn_time = t
+        n_turns = rng.randint(*cfg.turns_per_session)
+        for turn in range(n_turns):
+            user = _tokens(rng, rng.randint(*cfg.user_len), cfg.vocab)
+            output = _tokens(rng, rng.randint(*cfg.output_len), cfg.vocab)
+            prompt = history + user
+            requests.append(Request(
+                rid=rid, session_id=sid, prompt_tokens=prompt,
+                output_script=output, arrival=turn_time))
+            rid += 1
+            history = prompt + output
+            turn_time += _gamma_interval(rng, intra_rate, 1.0)
+    requests.sort(key=lambda r: r.arrival)
+    return requests
+
+
+@dataclass
+class AgenticConfig:
+    n_jobs: int = 10
+    tool_calls_per_job: Tuple[int, int] = (2, 5)
+    system_prefix_len: int = 48
+    task_len: Tuple[int, int] = (64, 192)
+    tool_result_len: Tuple[int, int] = (32, 128)
+    output_len: Tuple[int, int] = (24, 64)
+    tool_duration: Tuple[float, float] = (0.5, 2.0)   # predictable, short
+    vocab: int = 250
+    qps: float = 0.5
+    seed: int = 0
+
+
+def agentic_workload(cfg: AgenticConfig) -> List[Request]:
+    """Tool-calling jobs: each model turn emits a tool call; the tool runs
+    for a short deterministic duration, then the next turn arrives with
+    history + tool result appended."""
+    rng = random.Random(cfg.seed)
+    system_prefix = _tokens(rng, cfg.system_prefix_len, cfg.vocab)
+    requests: List[Request] = []
+    rid = 0
+    t = 0.0
+    for job in range(cfg.n_jobs):
+        t += _gamma_interval(rng, cfg.qps, 0.25)
+        history = list(system_prefix) + _tokens(
+            rng, rng.randint(*cfg.task_len), cfg.vocab)
+        turn_time = t
+        n_calls = rng.randint(*cfg.tool_calls_per_job)
+        for call in range(n_calls + 1):
+            is_tool = call < n_calls
+            output = _tokens(rng, rng.randint(*cfg.output_len), cfg.vocab)
+            tool_dur = rng.uniform(*cfg.tool_duration) if is_tool else 0.0
+            requests.append(Request(
+                rid=rid, session_id=job, prompt_tokens=list(history),
+                output_script=output, arrival=turn_time,
+                is_tool_call=is_tool, tool_duration=tool_dur))
+            rid += 1
+            result = _tokens(rng, rng.randint(*cfg.tool_result_len), cfg.vocab)
+            history = history + output + result
+            turn_time += tool_dur + 0.05   # tool latency dominates the gap
+    requests.sort(key=lambda r: r.arrival)
+    return requests

@@ -1,0 +1,12 @@
+from repro.training.checkpoint import all_steps, latest_step, load, save
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import Optimizer, adafactor, adamw, for_arch
+from repro.training.train_step import make_train_step
+from repro.training.trainer import TrainConfig, Trainer
+
+__all__ = [
+    "all_steps", "latest_step", "load", "save",
+    "DataConfig", "SyntheticLM",
+    "Optimizer", "adafactor", "adamw", "for_arch",
+    "make_train_step", "TrainConfig", "Trainer",
+]

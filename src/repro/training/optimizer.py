@@ -1,0 +1,116 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor (factored second moment).
+
+Functional optax-style interface (no optax dependency).  Optimizer state
+mirrors the parameter pytree, so the parameter sharding specs apply to the
+state unchanged (ZeRO-style state sharding falls out of FSDP param specs).
+
+Adafactor is selected for the ≥300B configs (grok-1, kimi-k2): AdamW's
+fp32 moments alone would be 8–12 TB there (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    name: str
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+        p_leaves = treedef.flatten_up_to(params)
+        m_leaves = treedef.flatten_up_to(state["m"])
+        v_leaves = treedef.flatten_up_to(state["v"])
+        new_p, new_m, new_v = [], [], []
+        for g, m, v, p in zip(g_leaves, m_leaves, v_leaves, p_leaves):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m2 / (1 - b1 ** t)
+            vhat = v2 / (1 - b2 ** t)
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+                jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr * delta).astype(p.dtype))
+            new_m.append(m2)
+            new_v.append(v2)
+        unf = treedef.unflatten
+        return unf(new_p), {"m": unf(new_m), "v": unf(new_v)}
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), momentum-free, factored for ndim >= 2
+# ---------------------------------------------------------------------------
+
+def adafactor(lr: float = 3e-4, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree_util.tree_map(per_leaf, params)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+        p_leaves = treedef.flatten_up_to(params)
+        s_leaves = treedef.flatten_up_to(state)
+        new_p, new_s = [], []
+        for g, s, p in zip(g_leaves, s_leaves, p_leaves):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                     eps))
+                cfac = jax.lax.rsqrt(vc)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                new_s.append({"vr": vr, "vc": vc})
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v)
+                new_s.append({"v": v})
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr * u).astype(p.dtype))
+        return treedef.unflatten(new_p), treedef.unflatten(new_s)
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def for_arch(arch_params: int, lr: float = 3e-4) -> Optimizer:
+    """AdamW below 30B params, Adafactor above — at TP16 without FSDP,
+    AdamW's fp32 moments stop fitting v5e HBM past ~20B (DESIGN.md §4)."""
+    if arch_params >= 30e9:
+        return adafactor(lr=lr)
+    return adamw(lr=lr)

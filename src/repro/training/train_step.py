@@ -1,0 +1,72 @@
+"""Training step: remat'd forward, gradient accumulation via microbatch
+scan, optimizer update — one jittable function per (config, optimizer).
+
+Gradient accumulation bounds activation memory on the big configs: the
+global batch splits into ``grad_accum`` microbatches scanned sequentially;
+each microbatch runs the layer-scan with ``nothing_saveable`` remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import loss_fn
+from repro.training.optimizer import Optimizer
+
+
+def _split_microbatches(batch: Dict, n: int) -> Dict:
+    def rs(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return {k: rs(v) for k, v in batch.items()}
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer,
+                    grad_accum: int = 1,
+                    accum_dtype=None) -> Callable:
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics).
+
+    ``accum_dtype``: gradient-accumulator dtype.  fp32 by default; for
+    >=100B configs the fp32 accumulator alone is 2x param bytes per device,
+    so the launcher selects bf16 there (documented in DESIGN.md §4)."""
+    if accum_dtype is None:
+        accum_dtype = jnp.bfloat16 if cfg.param_count() >= 100e9 \
+            else jnp.float32
+
+    def compute_grads(params, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch)
+            return loss, grads
+
+        micro = _split_microbatches(batch, grad_accum)
+
+        def body(carry, mb):
+            acc_loss, acc_grads = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, cfg, mb)
+            acc_grads = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(a.dtype), acc_grads, grads)
+            return (acc_loss + loss, acc_grads), None
+
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, accum_dtype), params)
+        (loss_sum, grad_sum), _ = jax.lax.scan(body, (0.0, zero), micro)
+        scale = 1.0 / grad_accum
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grad_sum)
+        return loss_sum * scale, grads
+
+    def train_step(params, opt_state, batch, step):
+        loss, grads = compute_grads(params, batch)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        params, opt_state = opt.update(grads, opt_state, params, step)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": step + 1}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,99 @@
+"""Training loop with fault tolerance: periodic atomic checkpoints,
+resume-from-latest, deterministic restart, and a step-time watchdog
+(straggler telemetry at pod scale; logs locally here).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import init_params
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import Optimizer, for_arch
+from repro.training.train_step import make_train_step
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    grad_accum: int = 1
+    lr: float = 3e-4
+    seed: int = 0
+    log_every: int = 10
+    # watchdog: flag steps slower than `straggler_factor` x running median
+    straggler_factor: float = 3.0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, dcfg: DataConfig,
+                 opt: Optional[Optimizer] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.data = SyntheticLM(cfg, dcfg)
+        self.opt = opt or for_arch(cfg.param_count(), lr=tcfg.lr)
+        self.step_fn = jax.jit(make_train_step(cfg, self.opt,
+                                               tcfg.grad_accum))
+        self.params = None
+        self.opt_state = None
+        self.step = 0
+        self.history: List[Dict] = []
+        self._step_times: List[float] = []
+
+    # ------------------------------------------------------------------
+    def init_or_resume(self) -> int:
+        t = self.tcfg
+        if t.ckpt_dir and ckpt.latest_step(t.ckpt_dir) is not None:
+            self.params, self.opt_state, meta = ckpt.load(t.ckpt_dir)
+            self.params = jax.tree_util.tree_map(jnp.asarray, self.params)
+            self.opt_state = jax.tree_util.tree_map(jnp.asarray,
+                                                    self.opt_state)
+            self.step = int(meta["step"])
+        else:
+            self.params = init_params(self.cfg, jax.random.PRNGKey(t.seed))
+            self.opt_state = self.opt.init(self.params)
+            self.step = 0
+        return self.step
+
+    # ------------------------------------------------------------------
+    def run(self) -> List[Dict]:
+        if self.params is None:
+            self.init_or_resume()
+        t = self.tcfg
+        while self.step < t.steps:
+            batch = self.data.batch_at(self.step)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch, jnp.int32(self.step))
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self._watchdog(dt)
+            self.step += 1
+            rec = {"step": self.step, "loss": loss,
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "step_time": dt}
+            self.history.append(rec)
+            if t.ckpt_dir and self.step % t.ckpt_every == 0:
+                ckpt.save(t.ckpt_dir, self.step, self.params, self.opt_state,
+                          extra={"data_seed": self.data.dcfg.seed})
+        if t.ckpt_dir:
+            ckpt.save(t.ckpt_dir, self.step, self.params, self.opt_state,
+                      extra={"data_seed": self.data.dcfg.seed})
+        return self.history
+
+    def _watchdog(self, dt: float) -> None:
+        self._step_times.append(dt)
+        if len(self._step_times) >= 8:
+            med = sorted(self._step_times[-32:])[len(self._step_times[-32:]) // 2]
+            if dt > self.tcfg.straggler_factor * med:
+                # at pod scale this triggers re-scheduling / hot-spare swap;
+                # here we record the event for the run report
+                self.history.append({"straggler_step_time": dt,
+                                     "median": med})

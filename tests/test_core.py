@@ -1,0 +1,341 @@
+"""Unit + property tests for the AsymCache core (treap, frequency function,
+evictors, cost model, block manager, lifespan adaptation)."""
+import math
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AsymCacheEvictor,
+    AsymCacheLinearEvictor,
+    BlockManager,
+    EvictableMeta,
+    FreqParams,
+    LRUEvictor,
+    LifespanTracker,
+    MaxScoreEvictor,
+    PensieveEvictor,
+    Treap,
+    analytic_cost_model,
+    fit,
+    make_policy,
+)
+from repro.configs import get_config
+
+
+# ---------------------------------------------------------------------------
+# Treap
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n_ops=st.integers(10, 400))
+def test_treap_matches_sorted_list(seed, n_ops):
+    rng = random.Random(seed)
+    t = Treap(seed)
+    ref = []
+    for i in range(n_ops):
+        if rng.random() < 0.6 or not ref:
+            k = rng.random()
+            t.insert(k, i)
+            ref.append((k, i))
+        else:
+            item = rng.choice(ref)
+            ref.remove(item)
+            assert t.delete(*item)
+        assert t.min() == (min(ref) if ref else None)
+        assert len(t) == len(ref)
+    assert t.validate()
+
+
+def test_treap_large_no_recursion_limit():
+    t = Treap(1)
+    for i in range(120_000):
+        t.insert(float(i % 977) + i * 1e-9, i)
+    assert len(t) == 120_000
+    assert t.min()[1] == 0 or t.min()[0] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Frequency function / order preservation
+# ---------------------------------------------------------------------------
+
+def test_freq_turning_point():
+    fp = FreqParams.from_turning_point(lifespan=10.0, reuse_prob=0.5,
+                                       slope_ratio=40.0)
+    assert abs(fp.f(10.0) - 0.5) < 1e-9          # continuity at turning point
+    assert abs(fp.f(0.0) - 1.0) < 1e-9
+    # slope ratio: derivative magnitude jumps by 40x
+    eps = 1e-6
+    s1 = (fp.f(10.0 - eps) - fp.f(10.0)) / eps
+    s2 = (fp.f(10.0) - fp.f(10.0 + eps)) / eps
+    assert abs(s2 / s1 - 40.0) < 0.5
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    a1=st.floats(0, 100), a2=st.floats(0, 100),
+    c1=st.floats(-10, 0), c2=st.floats(-10, 0),
+    t1=st.floats(100, 200), t2=st.floats(200, 400),
+)
+def test_order_preserving_rule_per_segment(a1, a2, c1, c2, t1, t2):
+    """Eq. 8: within one exponential segment, the sign of the weight
+    difference between two blocks never flips over time."""
+    fp = FreqParams.from_turning_point(lifespan=10.0)
+    def sgn(x):
+        return 0 if abs(x) < 1e-12 else math.copysign(1, x)
+    w = lambda a, c, t: fp.log_w1(fp.key1(a, c), t)
+    d1 = w(a1, c1, t1) - w(a2, c2, t1)
+    d2 = w(a1, c1, t2) - w(a2, c2, t2)
+    assert sgn(d1) == sgn(d2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 9999))
+def test_log_evictor_matches_linear_evictor(seed):
+    """The O(log n) two-treap evictor must pick identical victims to the
+    O(n) scan over the full piecewise weight — end to end."""
+    rng = random.Random(seed)
+    fp = FreqParams.from_turning_point(lifespan=5.0, reuse_prob=0.5,
+                                       slope_ratio=40.0)
+    ev_log = AsymCacheEvictor(fp, seed=seed)
+    ev_lin = AsymCacheLinearEvictor(fp)
+    now = 0.0
+    next_id = 0
+    live = set()
+    for _ in range(300):
+        now += rng.random()
+        op = rng.random()
+        if op < 0.5 or not live:
+            m = EvictableMeta(last_access=now - rng.random() * 20,
+                              log_cost=math.log(1e-6 + rng.random() * 1e-3),
+                              count=1 + rng.random() * 4)
+            ev_log.add(next_id, m)
+            ev_lin.add(next_id, m)
+            live.add(next_id)
+            next_id += 1
+        elif op < 0.7:
+            bid = rng.choice(sorted(live))
+            ev_log.remove(bid)
+            ev_lin.remove(bid)
+            live.discard(bid)
+        else:
+            a = ev_log.evict(now)
+            b = ev_lin.evict(now)
+            assert a == b
+            live.discard(a)
+
+
+def test_lambda_shifts_turning_point():
+    fp = FreqParams.from_turning_point(lifespan=10.0)
+    ev = AsymCacheEvictor(fp, use_hit_count=False)
+    # two blocks: recent+cheap vs old+expensive
+    ev.add(1, EvictableMeta(last_access=99.0, log_cost=math.log(1e-6)))
+    ev.add(2, EvictableMeta(last_access=60.0, log_cost=math.log(1e-3)))
+    now = 100.0
+    # with default λ the old block has decayed through the steep segment
+    assert ev.evict(now) == 2
+    ev2 = AsymCacheEvictor(fp, use_hit_count=False)
+    ev2.add(1, EvictableMeta(last_access=99.0, log_cost=math.log(1e-6)))
+    ev2.add(2, EvictableMeta(last_access=60.0, log_cost=math.log(1e-3)))
+    # extend the effective lifespan far beyond 40s -> old block's value no
+    # longer collapsed; cheap recent block evicted first
+    ev2.set_log_lambda(fp.log_lambda_for_lifespan(200.0))
+    assert ev2.evict(now) == 1
+
+
+def test_degenerates_to_lru_with_uniform_cost():
+    """Paper §4.2: with uniform ΔT and no hit counts, AsymCache == LRU."""
+    fp = FreqParams.from_turning_point(lifespan=10.0)
+    ev = AsymCacheEvictor(fp, use_hit_count=False)
+    lru = LRUEvictor()
+    rng = random.Random(3)
+    now = 0.0
+    for i in range(100):
+        now += rng.random()
+        m = EvictableMeta(last_access=now, log_cost=0.0)
+        ev.add(i, m)
+        lru.add(i, m)
+    for _ in range(100):
+        now += rng.random()
+        assert ev.evict(now) == lru.evict(now)
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+def test_cost_fit_r2():
+    rng = random.Random(0)
+    true = [1e-6, 2e-5, 1e-6, 2e-5, 3e-9, 4e-9]
+    beta = 1e-4
+    rows, ys = [], []
+    for _ in range(1100):
+        l1, q1, l2, q2 = [rng.randint(0, 4000) for _ in range(4)]
+        y = (true[0] * l1 + true[1] * q1 + true[2] * l2 + true[3] * q2
+             + true[4] * (l1 + q1) ** 2 + true[5] * q2 * (l1 + q1 + l2 + q2)
+             + beta)
+        rows.append((l1, q1, l2, q2))
+        ys.append(y * (1 + rng.gauss(0, 0.002)))
+    cm = fit(rows, ys)
+    assert cm.r2 > 0.999      # paper: R² > 0.999 on 1.1K profiles
+
+
+def test_block_cost_monotone_in_position():
+    cm = analytic_cost_model(get_config("llama31-8b"))
+    costs = [cm.block_cost(p * 16, 16) for p in range(0, 2048, 64)]
+    assert all(b > a for a, b in zip(costs, costs[1:]))
+
+
+def test_windowed_cost_saturates():
+    import dataclasses
+    cfg = get_config("llama31-8b")
+    cfg = dataclasses.replace(cfg, sliding_window=1024)
+    cm = analytic_cost_model(cfg)
+    assert cm.block_cost(10_000 * 16, 16) == cm.block_cost(2_000 * 16, 16)
+
+
+# ---------------------------------------------------------------------------
+# Block manager
+# ---------------------------------------------------------------------------
+
+def _mk_bm(policy="asymcache", blocks=32, bs=4):
+    fp = FreqParams.from_turning_point(lifespan=10.0)
+    cm = analytic_cost_model(get_config("llama31-8b"))
+    return BlockManager(blocks, bs, make_policy(policy, fp), cm, fp)
+
+
+def test_multi_segment_match_structure():
+    bm = _mk_bm(blocks=16)
+    toks = list(range(40))
+    hashes = bm.block_hashes(toks)
+    slots = bm.allocate(10, now=1.0)
+    for i, (s, h) in enumerate(zip(slots, hashes)):
+        bm.commit(s, h, i)
+    bm.release(slots, now=2.0)
+    bm.allocate(9, now=3.0)  # forces 3 evictions
+    m = bm.match(toks, now=4.0, acquire=False)
+    assert m.num_hits == 7
+    segs = m.segments()
+    assert all(isinstance(s, tuple) for s in segs)
+    assert sum(e - s for s, e, hit in segs if hit) == 7
+
+
+def test_asymcache_evicts_cheap_positions_first():
+    """Position-aware eviction: earliest (cheapest-to-recompute) blocks go
+    first when frequency is equal — the paper's core asymmetry."""
+    bm = _mk_bm(blocks=16)
+    toks = list(range(40))
+    hashes = bm.block_hashes(toks)
+    slots = bm.allocate(10, now=1.0)
+    for i, (s, h) in enumerate(zip(slots, hashes)):
+        bm.commit(s, h, i)
+    bm.release(slots, now=2.0)
+    bm.allocate(9, now=3.0)
+    m = bm.match(toks, now=4.0, acquire=False)
+    assert m.hit_mask == [False] * 3 + [True] * 7
+
+
+def test_lru_evicts_by_recency_not_position():
+    bm = _mk_bm(policy="lru", blocks=16)
+    toks = list(range(40))
+    hashes = bm.block_hashes(toks)
+    slots = bm.allocate(10, now=1.0)
+    for i, (s, h) in enumerate(zip(slots, hashes)):
+        bm.commit(s, h, i)
+    bm.release(slots, now=2.0)
+    bm.allocate(9, now=3.0)
+    m = bm.match(toks, now=4.0, acquire=False)
+    # LRU evicts in insertion (release) order: all same recency -> first 3
+    assert m.num_hits == 7
+
+
+def test_ref_counting_protects_blocks():
+    bm = _mk_bm(blocks=8)
+    toks = list(range(16))
+    hashes = bm.block_hashes(toks)
+    slots = bm.allocate(4, now=1.0)
+    for i, (s, h) in enumerate(zip(slots, hashes)):
+        bm.commit(s, h, i)
+    # NOT released: must not be evictable
+    assert bm.allocate(5, now=2.0) is None      # only 4 free left
+    got = bm.allocate(4, now=2.0)
+    assert got is not None
+    m = bm.match(toks, now=3.0, acquire=False)
+    assert m.num_hits == 4                       # originals survived
+
+
+def test_pinning_blocks_survive_eviction():
+    bm = _mk_bm(blocks=8, bs=4)
+    toks = list(range(16))
+    hashes = bm.block_hashes(toks)
+    slots = bm.allocate(4, now=1.0)
+    for i, (s, h) in enumerate(zip(slots, hashes)):
+        bm.commit(s, h, i)
+    bm.pin(slots, until=100.0)
+    bm.release(slots, now=2.0)
+    assert bm.allocate(8, now=3.0) is None       # 4 free, 4 pinned
+    got = bm.allocate(4, now=3.0)
+    assert got is not None
+    m = bm.match(toks, now=4.0, acquire=False)
+    assert m.num_hits == 4
+    # expire pins -> evictable again
+    bm.release(got, now=5.0)
+    bm.unpin_expired(now=200.0)
+    assert bm.allocate(8, now=201.0) is not None
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_block_manager_invariants(seed):
+    """Property: ref counts never negative; table only maps committed
+    blocks; free+evictable+referenced partitions the pool."""
+    rng = random.Random(seed)
+    bm = _mk_bm(blocks=24, bs=2)
+    live = []
+    now = 0.0
+    for step in range(200):
+        now += rng.random()
+        if rng.random() < 0.5:
+            n = rng.randint(1, 4)
+            toks = [rng.randint(0, 50) for _ in range(n * 2)]
+            m = bm.match(toks, now)
+            need = [i for i, hit in enumerate(m.hit_mask) if not hit]
+            slots = bm.allocate(len(need), now)
+            if slots is None:
+                bm.release([s for s in m.hit_slots if s is not None], now)
+                continue
+            hashes = bm.block_hashes(toks)
+            all_slots = list(m.hit_slots)
+            for idx, s in zip(need, slots):
+                bm.commit(s, hashes[idx], idx)
+                all_slots[idx] = s
+            live.append([s for s in all_slots if s is not None])
+        elif live:
+            slots = live.pop(rng.randrange(len(live)))
+            bm.release(slots, now)
+        # invariants
+        for blk in bm.blocks:
+            assert blk.ref_count >= 0
+        for h, slot in bm.table.items():
+            assert bm.blocks[slot].key == h
+
+
+# ---------------------------------------------------------------------------
+# Lifespan tracker
+# ---------------------------------------------------------------------------
+
+def test_lifespan_tracker_converges():
+    fp = FreqParams.from_turning_point(lifespan=10.0)
+    lt = LifespanTracker(fp, window=128, percentile=0.5, update_every=16)
+    rng = random.Random(0)
+    out = None
+    for _ in range(200):
+        r = lt.observe_reuse(30.0 + rng.random())
+        if r is not None:
+            out = r
+    assert out is not None
+    # λ should shift the turning point to ~30s
+    expected = fp.log_lambda_for_lifespan(30.5)
+    assert abs(out - expected) < abs(expected) * 0.2 + 0.5
