@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   Fig. 15     agentic            Continuum integration, QPS sweep
   Fig. 3/7    workload_stats     hit-position + reuse-interval PDFs
   (ours)      roofline_report    dry-run three-term roofline table
+  (ours)      prefix_sharing     cross-request sharing vs no-sharing
 """
 import argparse
 import sys
@@ -26,6 +27,7 @@ MODULES = [
     ("workload_stats", {}),
     ("offload", {}),
     ("roofline_report", {}),
+    ("prefix_sharing", {}),
 ]
 
 

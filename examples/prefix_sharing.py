@@ -1,0 +1,67 @@
+"""Cross-request prefix sharing on a shared-system-prompt agent fleet.
+
+Most requests lead with the same system prompt + tool preamble.  With
+prefix sharing on, the radix trie matches each new prompt against every
+previously served sequence: full shared blocks are mapped straight into
+the new request's page table (refcounted, unevictable while mapped), the
+partial block at the divergence point is forked copy-on-write, and the
+prefill computes only the unique suffix.
+
+    PYTHONPATH=src python examples/prefix_sharing.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config, scaled_config
+from repro.models import init_params
+from repro.serving import (
+    AsymCacheServer,
+    SchedulerConfig,
+    ServerConfig,
+    SharedPrefixConfig,
+    reference_logits,
+    shared_prefix_workload,
+)
+
+
+def main():
+    cfg = scaled_config(get_smoke_config("llama31-8b"), dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    wl_cfg = SharedPrefixConfig(n_jobs=10, shared_fraction=0.8,
+                                system_prefix_len=280, qps=0.8, seed=3)
+
+    def serve(sharing):
+        wl = shared_prefix_workload(wl_cfg)
+        srv = AsymCacheServer(cfg, params, ServerConfig(
+            policy="asymcache", num_blocks=320, block_size=16, clock="wall",
+            prefix_sharing=sharing,
+            scheduler=SchedulerConfig(token_budget=256, max_chunk=128,
+                                      max_prefills=2, max_decodes=8)))
+        return wl, srv.run(wl)
+
+    wl, res = serve(True)
+    _, base = serve(False)
+
+    print(f"{len(wl)} requests, {wl_cfg.system_prefix_len}-token shared "
+          f"preamble ({wl_cfg.shared_fraction:.0%} of jobs)")
+    print(f"prefill tokens computed: {res['prefill_compute_tokens']} shared "
+          f"vs {base['prefill_compute_tokens']} baseline "
+          f"({base['prefill_compute_tokens']/res['prefill_compute_tokens']:.2f}x"
+          f" reduction)")
+    print(f"trie-matched prefix tokens: {res['prefix_matched_tokens']} | "
+          f"copy-on-write forks: {res['cow_forks']} | "
+          f"block hit rate: {res['block_hit_rate']:.1%}")
+
+    worst = 0.0
+    for r in wl:
+        ref = reference_logits(cfg, params, r.prompt_tokens)
+        rel = float(np.max(np.abs(ref - r.first_logits))) / max(
+            1e-9, float(np.max(np.abs(ref))))
+        worst = max(worst, rel)
+    print(f"losslessness: worst relative logits error = {worst:.2e}")
+    assert worst < 2e-3
+    print("OK — shared prefixes served from cache, outputs exact.")
+
+
+if __name__ == "__main__":
+    main()

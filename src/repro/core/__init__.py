@@ -1,7 +1,13 @@
 # The paper's primary contribution: expected-latency-aware KV cache
 # management (AsymCache) — frequency function, O(log n) evictor,
 # cost model, block manager, online lifespan adaptation.
-from repro.core.block_manager import Block, BlockManager, MatchResult, chain_hash
+from repro.core.block_manager import (
+    Block,
+    BlockManager,
+    MatchResult,
+    chain_hash,
+    hash_seed,
+)
 from repro.core.cost_model import (
     H20,
     TPU_V5E,
@@ -24,10 +30,12 @@ from repro.core.evictor import (
 )
 from repro.core.freq import EwmaCounter, FreqParams
 from repro.core.lifespan import LifespanTracker
+from repro.core.prefix_trie import PrefixMatch, PrefixTrie
 from repro.core.treap import Treap
 
 __all__ = [
-    "Block", "BlockManager", "MatchResult", "chain_hash",
+    "Block", "BlockManager", "MatchResult", "chain_hash", "hash_seed",
+    "PrefixMatch", "PrefixTrie",
     "CostModel", "Hardware", "H20", "TPU_V5E", "analytic_cost_model",
     "fit", "mixed_window_cost_model",
     "POLICIES", "AsymCacheEvictor", "AsymCacheLinearEvictor",

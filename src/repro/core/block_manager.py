@@ -13,6 +13,25 @@ Bookkeeping per block:
   * ``ref_count``   — active requests currently mapping the block.
   * ``pinned_until``— Continuum-style TTL pin (ignored by eviction).
   * frequency state — last access + EWMA count (feeds the evictor keys).
+
+Cross-request prefix sharing (radix trie + copy-on-write):
+  * Any committed block is *already* shareable across requests through the
+    chain-hash table — a second request whose tokens reproduce the chain
+    simply acquires the same slot (``ref_count`` > 1) and the evictor
+    cannot touch it because referenced blocks are never in the evictable
+    set.  That invariant is what makes sharing safe: refcount>1 ⇒
+    unevictable, structurally.
+  * The :class:`~repro.core.prefix_trie.PrefixTrie` extends sharing to the
+    *partial* block at a divergence point: ``fork_into`` schedules a
+    device page copy from the donor block (copy-on-write — the fork
+    happens exactly when a writer diverges) and the requester recomputes
+    only from the divergence token onward.
+  * ``hash_salt`` isolates a request from the shared namespace (the
+    no-sharing baseline: every request recomputes its whole prompt).
+  * ``peak_ref`` (max concurrent sharers while resident) is folded into
+    the eviction objective: a block that served k concurrent requests has
+    its recompute cost weighted k× — evicting it forfeits k requests'
+    worth of savings.
 """
 from __future__ import annotations
 
@@ -24,10 +43,17 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.cost_model import CostModel
 from repro.core.evictor import EvictableMeta, EvictionPolicy
 from repro.core.freq import EwmaCounter, FreqParams
+from repro.core.prefix_trie import PrefixTrie
 
 
 def chain_hash(prev_hash: int, tokens: Tuple[int, ...]) -> int:
     return hash((prev_hash, tokens))
+
+
+def hash_seed(salt: int) -> int:
+    """Chain-hash seed: salt 0 is the shared namespace; any other salt
+    isolates the request's blocks from cross-request reuse."""
+    return 0 if salt == 0 else hash(("prefix-salt", salt))
 
 
 @dataclass
@@ -36,6 +62,7 @@ class Block:
     key: Optional[int] = None       # chain hash (None = uncommitted)
     block_pos: int = 0
     ref_count: int = 0
+    peak_ref: int = 1               # max concurrent sharers while resident
     pinned_until: float = -math.inf
     last_access: float = 0.0
     count: float = 1.0              # EWMA hit count
@@ -74,7 +101,8 @@ class BlockManager:
                  policy: EvictionPolicy, cost_model: CostModel,
                  freq: FreqParams, count_gamma: Optional[float] = None,
                  host_blocks: int = 0,
-                 swap_out_fn=None, swap_in_fn=None):
+                 swap_out_fn=None, swap_in_fn=None,
+                 prefix_sharing: bool = True):
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.policy = policy
@@ -94,6 +122,14 @@ class BlockManager:
         self.swap_in_fn = swap_in_fn        # (slot, payload) -> None
         self.n_swap_ins = 0
         self.n_swap_outs = 0
+        # ---- cross-request prefix sharing: token radix trie over served
+        # sequences + pending copy-on-write page copies (engine-drained)
+        self.prefix_trie: Optional[PrefixTrie] = \
+            PrefixTrie() if prefix_sharing else None
+        self.pending_copies: List[Tuple[int, int]] = []   # (src, dst) slots
+        self.n_cow_forks = 0
+        self.n_prefix_matches = 0
+        self.prefix_tokens_matched = 0
         # stats
         self.n_lookups = 0
         self.n_hits = 0
@@ -105,10 +141,11 @@ class BlockManager:
     # ------------------------------------------------------------------
     # matching
     # ------------------------------------------------------------------
-    def block_hashes(self, tokens: Sequence[int]) -> List[int]:
+    def block_hashes(self, tokens: Sequence[int],
+                     salt: int = 0) -> List[int]:
         """Chain hashes for each *full* block of ``tokens``."""
         out = []
-        h = 0
+        h = hash_seed(salt)
         n_full = len(tokens) // self.block_size
         for i in range(n_full):
             chunk = tuple(tokens[i * self.block_size:(i + 1) * self.block_size])
@@ -139,21 +176,94 @@ class BlockManager:
                 continue
             host_hits.append(False)
             self.n_hits += 1
-            blk = self.blocks[slot]
             if acquire:
-                if blk.ref_count == 0:
-                    self.policy.remove(slot)
-                    self.reuse_intervals.append(max(now - blk.last_access,
-                                                    1e-9))
-                blk.ref_count += 1
-                blk.count = (blk.count * math.exp(
-                    -(now - blk.last_access) / self.count_gamma) + 1.0)
-                blk.last_access = now
+                self._acquire(slot, now)
             hit_slots.append(slot)
             hit_mask.append(True)
             self.hit_positions.append((pos, len(hashes)))
         return MatchResult(hit_slots=hit_slots, num_blocks=len(hashes),
                            hit_mask=hit_mask, host_hits=host_hits)
+
+    def _acquire(self, slot: int, now: float) -> None:
+        """Take a reference on a resident block: un-enqueue it from the
+        evictable set and update its frequency/sharing bookkeeping."""
+        blk = self.blocks[slot]
+        if blk.ref_count == 0:
+            self.policy.remove(slot)
+            self.reuse_intervals.append(max(now - blk.last_access, 1e-9))
+        blk.ref_count += 1
+        blk.peak_ref = max(blk.peak_ref, blk.ref_count)
+        blk.count = (blk.count * math.exp(
+            -(now - blk.last_access) / self.count_gamma) + 1.0)
+        blk.last_access = now
+
+    # ------------------------------------------------------------------
+    # cross-request prefix sharing (radix trie + copy-on-write)
+    # ------------------------------------------------------------------
+    def request_salt(self, rid: int, salt: int = 0) -> int:
+        """Effective chain-hash salt for a request.  With prefix sharing
+        off, every request gets a private nonzero salt (rid+1) so nothing
+        matches across requests; the request object itself is never
+        mutated, so the same workload can be replayed against a sharing
+        server afterwards."""
+        if self.prefix_trie is None and salt == 0:
+            return rid + 1
+        return salt
+
+    def register_prefix(self, tokens: Sequence[int]) -> None:
+        """Index a served sequence so later requests can share its prefix."""
+        if self.prefix_trie is not None:
+            self.prefix_trie.insert(tokens)
+
+    def match_shared_prefix(self, tokens: Sequence[int],
+                            hashes: List[int]) -> Tuple[int, Optional[int]]:
+        """Longest previously-served prefix of ``tokens`` and, when it ends
+        mid-block, a resident donor slot for the copy-on-write fork.
+
+        Returns ``(matched_tokens, donor_slot)``.  Full blocks inside the
+        match are found by the ordinary hash-table :meth:`match`; only the
+        trailing partial block needs the donor.  ``hashes`` must be the
+        caller's salt-0 chain hashes (sharing is only defined in the
+        shared namespace)."""
+        if self.prefix_trie is None or not tokens:
+            return 0, None
+        pm = self.prefix_trie.match(tokens)
+        matched = min(pm.length, len(tokens))
+        if matched == 0:
+            return 0, None
+        self.n_prefix_matches += 1
+        self.prefix_tokens_matched += matched
+        bs = self.block_size
+        b, rem = divmod(matched, bs)
+        if rem == 0:
+            return matched, None
+        # donor block b covers positions [b*bs, (b+1)*bs); its first `rem`
+        # positions' K/V are valid for us (identical token prefix).  Its
+        # chain hash needs the donor's own continuation tokens.
+        need = bs - rem
+        common = tuple(tokens[b * bs:matched])
+        prev = hashes[b - 1] if b > 0 else hash_seed(0)
+        for completion in self.prefix_trie.completions(pm, need):
+            slot = self.table.get(chain_hash(prev, common + completion))
+            if slot is not None:
+                return matched, slot
+        return matched, None
+
+    def fork_into(self, src_slot: int, dst_slot: int, now: float) -> None:
+        """Copy-on-write fork: schedule a device page copy ``src -> dst``.
+
+        The source is acquired (ref-counted) so it cannot be evicted before
+        the engine drains the copy; the caller releases it via the slots
+        returned by :meth:`drain_pending_copies`."""
+        self._acquire(src_slot, now)
+        self.pending_copies.append((src_slot, dst_slot))
+        self.n_cow_forks += 1
+
+    def drain_pending_copies(self) -> List[Tuple[int, int]]:
+        """Hand the queued (src, dst) page copies to the engine.  The caller
+        must ``release`` the src slots once the copies have executed."""
+        out, self.pending_copies = self.pending_copies, []
+        return out
 
     # ------------------------------------------------------------------
     # allocation / eviction
@@ -180,6 +290,7 @@ class BlockManager:
             blk = self.blocks[slot]
             blk.key = None
             blk.ref_count = 1
+            blk.peak_ref = 1
             blk.count = 1.0
             blk.boost = 1.0
             blk.last_access = now
@@ -229,9 +340,11 @@ class BlockManager:
         blk = self.blocks[slot]
         log_cost = self.cost_model.log_block_cost(
             blk.block_pos * self.block_size, self.block_size)
+        # shared-block savings: a block k requests mapped concurrently is
+        # worth k recomputations if evicted -> weight its cost by peak_ref
         self.policy.add(slot, EvictableMeta(
             last_access=blk.last_access,
-            log_cost=log_cost + math.log(blk.boost),
+            log_cost=log_cost + math.log(blk.boost * max(blk.peak_ref, 1)),
             count=blk.count))
 
     # ------------------------------------------------------------------

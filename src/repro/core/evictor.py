@@ -5,6 +5,14 @@ unpinned).  The block manager calls ``add`` when a block becomes evictable,
 ``remove`` when it is reused (cache hit) or force-freed, and ``evict`` when
 it needs a victim.
 
+Blocks referenced by any live request — including blocks shared across
+requests via cross-request prefix sharing (refcount > 1) — are never in
+the evictable set at all, so no policy can victimize them.  Shared-block
+savings still reach the objective: when a previously shared block finally
+becomes evictable, the block manager folds its peak concurrent sharer
+count into ``EvictableMeta.log_cost`` (evicting it would forfeit that many
+requests' worth of recompute savings).
+
 Policies:
   * ``AsymCacheEvictor``        — Algorithm 1: two treaps, O(log n)
   * ``AsymCacheLinearEvictor``  — identical weights, O(n) scan (Table 2 ablation)

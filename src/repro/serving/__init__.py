@@ -9,15 +9,17 @@ from repro.serving.scheduler import (
 from repro.serving.server import AsymCacheServer, ServerConfig, reference_logits
 from repro.serving.workload import (
     AgenticConfig,
+    SharedPrefixConfig,
     WorkloadConfig,
     agentic_workload,
     multi_turn_workload,
+    shared_prefix_workload,
 )
 
 __all__ = [
     "Engine", "EngineConfig", "Request", "RequestState", "SessionStats",
     "ChunkingScheduler", "PrefillChunk", "SchedulerConfig", "StepPlan",
     "AsymCacheServer", "ServerConfig", "reference_logits",
-    "AgenticConfig", "WorkloadConfig", "agentic_workload",
-    "multi_turn_workload",
+    "AgenticConfig", "SharedPrefixConfig", "WorkloadConfig",
+    "agentic_workload", "multi_turn_workload", "shared_prefix_workload",
 ]

@@ -169,6 +169,23 @@ class Engine:
             bt_pre=bt_pre, ctx_pre=ctx_pre, qlens=qlens,
             bt_dec=bt_dec, ctx_dec=ctx_dec, sel=sel).items()}
 
+    # -- copy-on-write page forks (cross-request prefix sharing) --------
+    def copy_pages(self, pairs: List[Tuple[int, int]]) -> None:
+        """Device-side K/V page copies ``src -> dst`` across all layers.
+
+        Shared *full* blocks need no copying — the block manager hands the
+        same slot to several requests and ``build_inputs`` simply maps that
+        slot into each sequence's page table.  Copies are only needed at a
+        divergence point: the destination page first receives the donor's
+        K/V (valid for the common positions by causality), then the forking
+        request overwrites the divergent tail as it computes it."""
+        if not pairs:
+            return
+        src = jnp.asarray([p[0] for p in pairs], jnp.int32)
+        dst = jnp.asarray([p[1] for p in pairs], jnp.int32)
+        self.k_pools = self.k_pools.at[:, dst].set(self.k_pools[:, src])
+        self.v_pools = self.v_pools.at[:, dst].set(self.v_pools[:, src])
+
     # -- host-tier swaps (paper §7 hierarchical storage) ----------------
     def swap_out(self, slot: int):
         """Copy one block's K/V (all layers) device -> host."""

@@ -31,6 +31,9 @@ class Request:
     # agentic metadata (Continuum integration)
     is_tool_call: bool = False        # output ends in a tool call
     tool_duration: float = 0.0        # estimated tool execution time (TTL)
+    # chain-hash namespace: 0 shares blocks across requests; any other
+    # value isolates this request (the no-prefix-sharing baseline)
+    hash_salt: int = 0
 
     # -- runtime state ------------------------------------------------------
     state: RequestState = RequestState.WAITING
@@ -47,6 +50,9 @@ class Request:
     n_hit_blocks: int = 0
     n_total_blocks: int = 0
     n_swapped: int = 0        # host-tier blocks restored by swap-in
+    prefix_len: int = 0       # tokens matched in the cross-request trie
+    n_cow_forks: int = 0      # copy-on-write partial-block forks
+    n_prefill_compute: int = 0  # prompt positions actually (re)computed
     # logits at prefill completion (losslessness validation)
     first_logits: Optional[object] = None
 
@@ -95,6 +101,10 @@ class SessionStats:
     request_lookups: int = 0
     block_hits: int = 0
     block_lookups: int = 0
+    prefill_compute_tokens: int = 0   # prompt positions actually computed
+    prompt_tokens: int = 0            # prompt positions submitted
+    prefix_matched_tokens: int = 0    # cross-request trie matches
+    cow_forks: int = 0
 
     def record(self, req: Request) -> None:
         self.ttfts.append(req.ttft)
@@ -105,6 +115,10 @@ class SessionStats:
         self.request_lookups += 1
         if req.n_hit_blocks > 0:
             self.request_hits += 1
+        self.prefill_compute_tokens += req.n_prefill_compute
+        self.prompt_tokens += req.prompt_len
+        self.prefix_matched_tokens += req.prefix_len
+        self.cow_forks += req.n_cow_forks
 
     def summary(self) -> Dict[str, float]:
         import numpy as np
@@ -122,4 +136,10 @@ class SessionStats:
             "job_latency_p90": _p(self.job_latencies, 90),
             "block_hit_rate": self.block_hits / max(self.block_lookups, 1),
             "request_hit_rate": self.request_hits / max(self.request_lookups, 1),
+            "prefill_compute_tokens": self.prefill_compute_tokens,
+            "prompt_tokens": self.prompt_tokens,
+            "prefix_matched_tokens": self.prefix_matched_tokens,
+            "cow_forks": self.cow_forks,
+            "prefill_savings": 1.0 - self.prefill_compute_tokens
+            / max(self.prompt_tokens, 1),
         }

@@ -72,12 +72,19 @@ class ChunkingScheduler:
 
         Full up-front allocation (prompt gaps + decode blocks) makes the
         loop deadlock-free: a running request never fails allocation.
-        Admission defers while the pool can't supply the gap blocks."""
+        Admission defers while the pool can't supply the gap blocks.
+
+        Cross-request prefix sharing happens in two layers here: full
+        blocks of a previously served prefix are ordinary chain-hash hits
+        (the prefill compute list simply starts after them), and a prefix
+        ending mid-block is completed by a copy-on-write fork of the donor
+        request's block, so only the post-divergence suffix is computed."""
         bs = self.cfg.block_size
         n_prompt_blocks = len(req.prompt_tokens) // bs
+        salt = self.bm.request_salt(req.rid, req.hash_salt)
         hashes = getattr(req, "_prompt_hashes", None)
         if hashes is None:
-            hashes = self.bm.block_hashes(req.prompt_tokens)
+            hashes = self.bm.block_hashes(req.prompt_tokens, salt=salt)
             req._prompt_hashes = hashes
         m = self.bm.match(req.prompt_tokens, now, hashes=hashes)  # acquires hits
         total_blocks = (req.target_len + bs - 1) // bs
@@ -109,15 +116,36 @@ class ChunkingScheduler:
             req.n_swapped = len(swapped)
             self.swaps_this_round += len(swapped)
 
+        # cross-request shared prefix (salt 0 = shared namespace): the trie
+        # match length is recorded for metrics; if the prefix ends mid-block
+        # and the donor's block is resident, fork it copy-on-write so the
+        # partial block's positions drop out of the compute list too
+        cow_block, cow_until = -1, -1
+        if salt == 0 and self.bm.prefix_trie is not None:
+            matched, donor = self.bm.match_shared_prefix(
+                req.prompt_tokens, hashes)
+            req.prefix_len = matched
+            if donor is not None:
+                b = matched // bs
+                hit = b < n_prompt_blocks and req.hit_mask[b]
+                if not hit and b not in swapped and b < len(req.block_slots):
+                    self.bm.fork_into(donor, req.block_slots[b], now)
+                    req.n_cow_forks += 1
+                    cow_block, cow_until = b, matched
+
         compute = []
         for p in range(req.prompt_len):
             b = p // bs
-            if b >= n_prompt_blocks or (not m.hit_mask[b] and b not in swapped):
+            cached = (b < n_prompt_blocks
+                      and (m.hit_mask[b] or b in swapped)) \
+                or (b == cow_block and p < cow_until)
+            if not cached:
                 compute.append(p)
         last = req.prompt_len - 1
         if not compute or compute[-1] != last:
             compute.append(last)     # always recompute the sampling position
         req.compute_list = compute
+        req.n_prefill_compute = len(compute)
         req.compute_ptr = 0
         req.admitted_at = now
         req.state = RequestState.PREFILL

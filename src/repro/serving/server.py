@@ -26,6 +26,7 @@ from repro.core import (
     LifespanTracker,
     analytic_cost_model,
     chain_hash,
+    hash_seed,
     make_policy,
 )
 from repro.serving.engine import Engine, EngineConfig
@@ -67,6 +68,11 @@ class ServerConfig:
     online_lifespan: bool = True
     continuum_ttl: bool = False         # agentic TTL pinning layer
     tool_boost: float = 8.0             # §5.2 correction factor
+    # cross-request prefix sharing: radix-trie matching of previously
+    # served prompts + copy-on-write forks of partially shared blocks.
+    # False salts every request's chain hashes so nothing is shared
+    # across requests (the vLLM-without-APC baseline).
+    prefix_sharing: bool = True
     # hierarchical KV storage (paper §7): evicted blocks spill to a host
     # tier of this many blocks (0 = off); swap-in replaces recomputation
     host_blocks: int = 0
@@ -93,7 +99,8 @@ class AsymCacheServer:
                                 if scfg.policy.startswith("asymcache") else {}))
         self.bm = BlockManager(scfg.num_blocks, scfg.block_size, policy,
                                self.cost_model, self.freq,
-                               host_blocks=scfg.host_blocks)
+                               host_blocks=scfg.host_blocks,
+                               prefix_sharing=scfg.prefix_sharing)
         self.sched = ChunkingScheduler(scfg.scheduler, self.bm)
         if scfg.execute_model:
             ecfg = ecfg or EngineConfig(
@@ -126,7 +133,8 @@ class AsymCacheServer:
         if len(hs) < n_blocks:
             bs = self.scfg.block_size
             toks = req.all_tokens
-            h = hs[-1] if hs else 0
+            h = hs[-1] if hs else hash_seed(
+                self.bm.request_salt(req.rid, req.hash_salt))
             for b in range(len(hs), n_blocks):
                 h = chain_hash(h, tuple(toks[b * bs:(b + 1) * bs]))
                 hs.append(h)
@@ -206,6 +214,14 @@ class AsymCacheServer:
                         f"({self.scfg.num_blocks} blocks)")
                 break
 
+            # copy-on-write forks queued during admission must land before
+            # the step reads the forked pages as attention context
+            copies = self.bm.drain_pending_copies()
+            if copies:
+                if hasattr(self.engine, "copy_pages"):
+                    self.engine.copy_pages(copies)
+                self.bm.release([s for s, _ in copies], self.now)
+
             t1 = time.perf_counter()
             logits = self.engine.execute(plan)
             exec_time = time.perf_counter() - t1
@@ -226,6 +242,8 @@ class AsymCacheServer:
             "swap_ins": self.bm.n_swap_ins,
             "swap_outs": self.bm.n_swap_outs,
             "block_hit_rate_manager": self.bm.hit_rate(),
+            "cow_forks_manager": self.bm.n_cow_forks,
+            "prefix_matches": self.bm.n_prefix_matches,
             "sim_time": self.now,
         })
         return out
@@ -244,6 +262,9 @@ class AsymCacheServer:
                 req.state = RequestState.DECODE
                 req.first_token_at = self.now
                 req.first_logits = logits[r].copy()
+                if req.hash_salt == 0:
+                    # prompt is now resident: index it for prefix sharing
+                    self.bm.register_prefix(req.prompt_tokens)
                 req.generated.append(int(req.output_script[0]))
                 if len(req.output_script) <= 1:
                     self._finish(req)
@@ -264,6 +285,9 @@ class AsymCacheServer:
                 if ll is not None:
                     self.bm.policy.set_log_lambda(ll)
             self.bm.reuse_intervals.clear()
+        if req.hash_salt == 0:
+            # index prompt+output so follow-up turns can share the full chain
+            self.bm.register_prefix(req.all_tokens)
         if self.scfg.continuum_ttl and req.is_tool_call:
             slots = [s for s in req.block_slots if s is not None]
             self.bm.pin(slots, until=self.now + req.tool_duration)

@@ -120,3 +120,43 @@ def agentic_workload(cfg: AgenticConfig) -> List[Request]:
             turn_time += tool_dur + 0.05   # tool latency dominates the gap
     requests.sort(key=lambda r: r.arrival)
     return requests
+
+
+@dataclass
+class SharedPrefixConfig:
+    """Single-turn agentic jobs where most prompts lead with one long
+    shared system-prompt + tool-preamble block — the Continuum fleet
+    setting (paper §8) that cross-request prefix sharing targets.
+
+    ``shared_fraction`` of the jobs use the common preamble; the rest are
+    unrelated one-off prompts.  The preamble length deliberately defaults
+    to a non-multiple of the block size so the partial-block
+    copy-on-write path is exercised, not just full-block sharing."""
+    n_jobs: int = 16
+    shared_fraction: float = 0.75          # jobs using the common preamble
+    system_prefix_len: int = 200           # NOT a block multiple (16) on purpose
+    task_len: Tuple[int, int] = (32, 96)   # per-job unique suffix
+    output_len: Tuple[int, int] = (8, 24)
+    vocab: int = 250
+    qps: float = 2.0
+    seed: int = 0
+
+
+def shared_prefix_workload(cfg: SharedPrefixConfig) -> List[Request]:
+    rng = random.Random(cfg.seed)
+    system_prefix = _tokens(rng, cfg.system_prefix_len, cfg.vocab)
+    requests: List[Request] = []
+    t = 0.0
+    for rid in range(cfg.n_jobs):
+        t += _gamma_interval(rng, cfg.qps, 0.25)
+        task = _tokens(rng, rng.randint(*cfg.task_len), cfg.vocab)
+        if rng.random() < cfg.shared_fraction:
+            prompt = list(system_prefix) + task
+        else:
+            prompt = _tokens(rng, cfg.system_prefix_len // 2, cfg.vocab) + task
+        requests.append(Request(
+            rid=rid, session_id=rid, prompt_tokens=prompt,
+            output_script=_tokens(rng, rng.randint(*cfg.output_len),
+                                  cfg.vocab),
+            arrival=t))
+    return requests

@@ -1,0 +1,36 @@
+"""Optional-``hypothesis`` shim so the suite collects on a bare interpreter.
+
+Property-based tests import ``given``/``settings``/``st`` from here.  When
+``hypothesis`` is installed (the ``test`` extra) they behave normally; when
+it is not, ``@given`` turns the test into a skip (the importorskip happens
+lazily inside the decorated test, so collection of the module — and every
+non-property test in it — still succeeds).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipper(*a, **k):
+                pytest.importorskip("hypothesis")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Placeholder: accepts any strategy-constructor call at decoration
+        time; the decorated test is skipped before strategies are drawn."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

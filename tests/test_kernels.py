@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.msa import msa_decode, msa_prefill, write_kv_pages
 from repro.kernels.msa import ref as msa_ref
