@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   Fig. 3/7    workload_stats     hit-position + reuse-interval PDFs
   (ours)      roofline_report    dry-run three-term roofline table
   (ours)      prefix_sharing     cross-request sharing vs no-sharing
+  (ours)      pipeline           overlapped pipeline vs synchronous loop
 """
 import argparse
 import sys
@@ -28,6 +29,7 @@ MODULES = [
     ("offload", {}),
     ("roofline_report", {}),
     ("prefix_sharing", {}),
+    ("pipeline", {}),
 ]
 
 

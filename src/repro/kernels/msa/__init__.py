@@ -1,3 +1,10 @@
-from repro.kernels.msa.ops import msa_decode, msa_prefill, write_kv_pages
+from repro.kernels.msa.ops import (
+    apply_page_copies,
+    apply_swap_ins,
+    msa_decode,
+    msa_prefill,
+    write_kv_pages,
+)
 
-__all__ = ["msa_decode", "msa_prefill", "write_kv_pages"]
+__all__ = ["apply_page_copies", "apply_swap_ins", "msa_decode",
+           "msa_prefill", "write_kv_pages"]

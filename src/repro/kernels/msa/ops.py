@@ -50,3 +50,53 @@ def msa_decode(q, k_pages, v_pages, block_tables, context_lens, *,
 
 
 write_kv_pages = ref.write_kv_pages
+
+
+# ---------------------------------------------------------------------------
+# In-step page maintenance (overlapped pipeline)
+#
+# Copy-on-write forks and host-tier swap-ins used to run as eager un-jitted
+# ``.at[].set`` dispatches between steps; folding them into the jitted step
+# as padded index arrays removes those host round-trips.  Both operate on
+# the layer-stacked pools (L, P, page, KH, D) and use out-of-range
+# destination indices (dst == P) as padding, dropped by the scatter.
+# ---------------------------------------------------------------------------
+
+def apply_page_copies(k_pools: jax.Array, v_pools: jax.Array,
+                      copy_src: jax.Array, copy_dst: jax.Array):
+    """COW page copies ``src -> dst`` across all layers, inside the step.
+
+    ``copy_src``/``copy_dst`` are (C,) int32.  Padding entries REPEAT the
+    last real copy (idempotent) or are the identity ``0 -> 0`` when the
+    step has no copies at all — see ``Engine._fold_page_ops``.
+
+    All source pages are gathered *before* any write (copy sources are
+    committed blocks, destinations fresh allocations, so sources never
+    alias destinations), then written with unrolled dynamic-slice updates.
+    A scatter whose update operand gathers from the scattered array itself
+    would force XLA to materialize a full defensive pool copy per step;
+    the gather-then-update form keeps the update operand independent so
+    the writes happen in place in the donated pools."""
+    c = copy_src.shape[0]
+    if c == 0:
+        return k_pools, v_pools
+    k_pages = k_pools[:, copy_src]      # (L, C, page, KH, D) — small
+    v_pages = v_pools[:, copy_src]
+    for j in range(c):
+        k_pools = jax.lax.dynamic_update_slice_in_dim(
+            k_pools, k_pages[:, j:j + 1], copy_dst[j], axis=1)
+        v_pools = jax.lax.dynamic_update_slice_in_dim(
+            v_pools, v_pages[:, j:j + 1], copy_dst[j], axis=1)
+    return k_pools, v_pools
+
+
+def apply_swap_ins(k_pools: jax.Array, v_pools: jax.Array,
+                   swap_dst: jax.Array,
+                   swap_k: jax.Array, swap_v: jax.Array):
+    """Host-tier swap-ins: scatter (L, S, page, KH, D) payloads into pool
+    pages ``swap_dst`` (S,), padding steered out of range and dropped."""
+    if swap_dst.shape[0] == 0:
+        return k_pools, v_pools
+    k_pools = k_pools.at[:, swap_dst].set(swap_k, mode="drop")
+    v_pools = v_pools.at[:, swap_dst].set(swap_v, mode="drop")
+    return k_pools, v_pools

@@ -58,28 +58,32 @@ def msa_prefill_ref(
     v = _gather_kv(v_pages, block_tables)
     s_len = k.shape[1]
 
-    kf = jnp.repeat(k, n_rep, axis=2).astype(jnp.float32)
-    vf = jnp.repeat(v, n_rep, axis=2).astype(jnp.float32)
-    qf = q.astype(jnp.float32) * scale
+    # GQA via grouped heads: fold the query-head replication into the
+    # einsum instead of materializing jnp.repeat'ed (R, S, H, D) K/V
+    # copies — the repeat doubled the step's memory traffic and dominated
+    # the XLA step time on CPU
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = (q.astype(jnp.float32) * scale).reshape(r, qp, kh, n_rep, d)
 
-    scores = jnp.einsum("rqhd,rshd->rhqs", qf, kf)
+    scores = jnp.einsum("rqhgd,rshd->rhgqs", qf, kf)    # (R, KH, G, QP, S)
     if softcap > 0:
         scores = softcap * jnp.tanh(scores / softcap)
 
     kv_pos = jnp.arange(s_len, dtype=jnp.int32)
-    mask = kv_pos[None, None, None, :] < context_lens[:, None, None, None]
-    rel = q_pos[:, None, :, None] - kv_pos[None, None, None, :]
+    mask = kv_pos[None, None, :] < context_lens[:, None, None]
+    rel = q_pos[:, :, None] - kv_pos[None, None, :]
     mask = mask & (rel >= 0)
     if window > 0:
         mask = mask & (rel < window)
     qvalid = (jnp.arange(qp, dtype=jnp.int32)[None, :] < q_lens[:, None])
-    mask = mask & qvalid[:, None, :, None]
+    mask = (mask & qvalid[:, :, None])[:, None, None]   # (R, 1, 1, QP, S)
 
     scores = jnp.where(mask, scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     p = jnp.where(mask, p, 0.0)             # fully-masked rows -> 0
-    out = jnp.einsum("rhqs,rshd->rqhd", p, vf)
-    return out.astype(q.dtype)
+    out = jnp.einsum("rhgqs,rshd->rqhgd", p, vf)
+    return out.reshape(r, qp, h, d).astype(q.dtype)
 
 
 def msa_decode_ref(

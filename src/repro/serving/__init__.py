@@ -1,4 +1,4 @@
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving.engine import Engine, EngineConfig, StepHandle
 from repro.serving.request import Request, RequestState, SessionStats
 from repro.serving.scheduler import (
     ChunkingScheduler,
@@ -17,7 +17,8 @@ from repro.serving.workload import (
 )
 
 __all__ = [
-    "Engine", "EngineConfig", "Request", "RequestState", "SessionStats",
+    "Engine", "EngineConfig", "StepHandle", "Request", "RequestState",
+    "SessionStats",
     "ChunkingScheduler", "PrefillChunk", "SchedulerConfig", "StepPlan",
     "AsymCacheServer", "ServerConfig", "reference_logits",
     "AgenticConfig", "SharedPrefixConfig", "WorkloadConfig",

@@ -8,13 +8,30 @@ two kernel dispatches over the same paged KV pool — the Pallas MSA
 prefill kernel and the paged flash-decode kernel.  Shapes are static
 (padded to the engine's buckets) so the step compiles exactly once.
 
+Overlapped pipeline support (one-step-deep, see docs/ARCHITECTURE.md):
+
+  * ``dispatch`` assembles inputs with vectorized numpy scatters over
+    per-request arrays cached on ``Request`` (no per-token Python loops),
+    packed into ONE int32 device transfer, and returns a
+    :class:`StepHandle` without waiting for the step itself — JAX async
+    dispatch lets the host schedule/assemble step N+1 while step N runs
+    (with donated pools, dispatching N+1 waits for N to finish: the
+    one-step pipeline barrier).
+  * Sampling happens on device: the step returns ``(R+B,)`` greedy token
+    ids plus only the ``(R, V)`` prefill logit rows needed for
+    losslessness checks, never the full ``(R+B, V)`` logits transfer.
+  * Copy-on-write page forks and host-tier swap-ins are queued
+    (``queue_copies`` / ``queue_swap_in``) and folded INTO the jitted
+    step as padded ``(src, dst)`` index arrays; overflow past the static
+    buckets falls back to the eager paths so shapes stay static.
+
 Engine scope: decoder-only token LMs (dense / MoE / sliding-window mixes).
 SSM-family archs have no evictable KV cache (DESIGN.md §Arch-applicability)
 and are served by the dense decode path in ``repro.models`` instead.
 """
 from __future__ import annotations
 
-import functools
+import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
@@ -23,7 +40,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.kernels.msa import msa_decode, msa_prefill, write_kv_pages
+from repro.kernels.msa import (
+    apply_page_copies,
+    apply_swap_ins,
+    msa_decode,
+    msa_prefill,
+    write_kv_pages,
+)
 from repro.models.layers import apply_rope, moe_ffn_local, rms_norm, swiglu_mlp
 from repro.models.model import _layer_windows
 from repro.serving.scheduler import StepPlan
@@ -39,6 +62,68 @@ class EngineConfig:
     max_blocks_per_seq: int = 64   # NP
     attn_impl: str = "xla"         # "xla" | "pallas" | "pallas_interpret"
     q_tile: int = 128
+    # static buckets for page ops folded into the jitted step; overflow
+    # falls back to the eager dispatch paths (shapes must stay static).
+    # Setting a bucket to 0 routes ALL ops of that kind through the eager
+    # fallback (the pre-pipeline behaviour).
+    max_instep_copies: int = 8     # COW forks per step
+    max_instep_swaps: int = 4      # host-tier swap-ins per step
+    # "vectorized": numpy scatters over per-request cached arrays;
+    # "legacy": the original per-token Python loops, kept as the reference
+    # implementation the vectorized path is tested against and as the
+    # synchronous-baseline control plane in benchmarks/pipeline.py.
+    assembly: str = "vectorized"
+    # True restores the pre-pipeline device interface: the step returns
+    # the full (R+B, V) logits and StepHandle.block() transfers them all
+    # to the host — the per-step sync the paper's §5.3 overlap removes.
+    # False (default) keeps sampling on device: only (R+B,) token ids and
+    # the (R, V) prefill rows ever leave it.
+    return_full_logits: bool = False
+    # buffer-donate the KV pools into the step.  Donation halves pool
+    # memory (XLA aliases input to output) and avoids a full pool copy at
+    # the jit boundary.  Dispatching step N+1 blocks until step N (the
+    # donated buffer's producer) has finished — which is exactly the
+    # one-step pipeline barrier: every OTHER host action (postprocess,
+    # scheduling, assembly, device_put) overlaps step N, and dispatch
+    # with an already-materialized pool is asynchronous.  Set False to
+    # queue more than one step on the device (pipeline_depth > 1) at the
+    # cost of a per-step pool copy.
+    donate_pools: bool = True
+
+
+@dataclass
+class StepHandle:
+    """Asynchronous result of one dispatched step.
+
+    Holds device arrays; nothing is transferred until the ``*_np``
+    accessors run, so the server can keep assembling the next step while
+    this one executes.  ``block`` waits for the device — and when the
+    engine runs with ``return_full_logits`` (the synchronous baseline
+    interface) it also performs the full (R+B, V) host transfer the
+    pre-pipeline loop paid every step."""
+    token_ids: jax.Array           # (R+B,) device-side greedy samples
+    prefill_logits: jax.Array      # (R, V) rows ((R+B, V) full-logits mode)
+    assembly_time: float = 0.0     # host-side build_inputs seconds
+    full_logits: bool = False
+    _ids_np: Optional[np.ndarray] = None
+    _pre_np: Optional[np.ndarray] = None
+
+    def block(self) -> None:
+        if self.full_logits:
+            self.prefill_logits_np()   # the legacy full-vocab transfer
+            self.token_ids_np()
+        else:
+            jax.block_until_ready((self.token_ids, self.prefill_logits))
+
+    def token_ids_np(self) -> np.ndarray:
+        if self._ids_np is None:
+            self._ids_np = np.asarray(self.token_ids)
+        return self._ids_np
+
+    def prefill_logits_np(self) -> np.ndarray:
+        if self._pre_np is None:
+            self._pre_np = np.asarray(self.prefill_logits)
+        return self._pre_np
 
 
 class Engine:
@@ -54,14 +139,53 @@ class Engine:
             (L, ecfg.num_pages, ecfg.page_size, cfg.n_kv_heads, cfg.head_dim), dt)
         self.v_pools = jnp.zeros_like(self.k_pools)
         self.windows = [int(w) for w in np.asarray(_layer_windows(cfg, L))]
-        self._step = jax.jit(self._step_impl, donate_argnums=(1, 2))
+        self._step = jax.jit(
+            self._step_impl,
+            donate_argnums=(1, 2) if ecfg.donate_pools else ())
         self.steps_executed = 0
+        self.jit_traces = 0            # trace counter: must stay at 1
+        self._pending_copies: List[Tuple[int, int]] = []
+        self._pending_swaps: List[Tuple[int, object]] = []
+        # device-resident zero swap payload, reused on swap-free steps
+        # (their destinations are all padded out of range anyway)
+        self._zero_swap = jnp.zeros(
+            (L, ecfg.max_instep_swaps, ecfg.page_size, cfg.n_kv_heads,
+             cfg.head_dim), dt)
+        # packed-input layout (vectorized assembly): every int32 input in
+        # one flat host buffer -> ONE device_put per step instead of ~14
+        R, QP, B, NP = (ecfg.max_prefills, ecfg.max_chunk,
+                        ecfg.max_decodes, ecfg.max_blocks_per_seq)
+        T = R * QP + B
+        C, S = ecfg.max_instep_copies, ecfg.max_instep_swaps
+        fields = [("tokens", T), ("positions", T), ("valid", T),
+                  ("write_slot", T), ("write_off", T), ("sel", R + B),
+                  ("qlens", R), ("ctx_pre", R), ("ctx_dec", B),
+                  ("bt_pre", R * NP), ("bt_dec", B * NP),
+                  ("copy_src", C), ("copy_dst", C), ("swap_dst", S)]
+        self._pack_layout: List[Tuple[str, int, int]] = []
+        off = 0
+        for name, size in fields:
+            self._pack_layout.append((name, off, size))
+            off += size
+        self._pack_size = off
 
     # ------------------------------------------------------------------
     def _step_impl(self, params, k_pools, v_pools, inp):
+        self.jit_traces += 1           # side effect at trace time only
         cfg, e = self.cfg, self.ecfg
+        if e.assembly != "legacy":
+            inp = self._unpack(inp)    # trace-time slicing of the pack
         R, QP, B = e.max_prefills, e.max_chunk, e.max_decodes
         RQP = R * QP
+
+        # in-step page maintenance: swap-ins land first (they commit pages
+        # a COW fork in the same round may use as its donor), then copies;
+        # both must precede the KV writes/attention that read those pages
+        k_pools, v_pools = apply_swap_ins(
+            k_pools, v_pools, inp["swap_dst"], inp["swap_k"], inp["swap_v"])
+        k_pools, v_pools = apply_page_copies(
+            k_pools, v_pools, inp["copy_src"], inp["copy_dst"])
+
         x = params["embed"][inp["tokens"]]          # (T, d)
         pos = inp["positions"]
 
@@ -109,11 +233,115 @@ class Engine:
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
         logits = x[inp["sel"]] @ head                # (R+B, V)
-        return logits, k_pools, v_pools
+        # device-side greedy sampling: only (R+B,) ids and the R prefill
+        # rows (losslessness checks) ever leave the device — unless the
+        # legacy full-logits interface is requested for A/B baselines
+        token_ids = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out_logits = logits if e.return_full_logits else logits[:R]
+        return token_ids, out_logits, k_pools, v_pools
 
     # ------------------------------------------------------------------
     def build_inputs(self, plan: StepPlan) -> Dict[str, jax.Array]:
-        """Host-side assembly of the padded device arrays for one step."""
+        """Host-side assembly of the padded device arrays for one step.
+
+        The vectorized path assembles every int32 field directly into
+        named views of ONE flat host buffer and transfers it with a
+        single ``device_put`` (plus the two swap-payload buffers); the
+        per-field transfers of the legacy path cost more host time per
+        step than the arrays they move."""
+        if self.ecfg.assembly == "legacy":
+            out = self._assemble_legacy(plan)
+            out.update(self._fold_page_ops())
+            return {k: jnp.asarray(v) for k, v in out.items()}
+        buf = np.zeros((self._pack_size,), np.int32)
+        views = {name: buf[off:off + size]
+                 for name, off, size in self._pack_layout}
+        self._assemble_vectorized(plan, views)
+        ops = self._fold_page_ops(views)
+        return {"pack": jnp.asarray(buf),
+                "swap_k": jnp.asarray(ops["swap_k"]),
+                "swap_v": jnp.asarray(ops["swap_v"])}
+
+    def _unpack(self, inp: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        """Static slices of the packed buffer back into named step inputs
+        (trace-time only — compiles to views of the one transferred
+        buffer)."""
+        e = self.ecfg
+        R, B, NP = e.max_prefills, e.max_decodes, e.max_blocks_per_seq
+        buf = inp["pack"]
+        out = {name: buf[off:off + size]
+               for name, off, size in self._pack_layout}
+        out["valid"] = out["valid"].astype(bool)
+        out["bt_pre"] = out["bt_pre"].reshape(R, NP)
+        out["bt_dec"] = out["bt_dec"].reshape(B, NP)
+        out["swap_k"] = inp["swap_k"]
+        out["swap_v"] = inp["swap_v"]
+        return out
+
+    def _assemble_vectorized(self, plan: StepPlan,
+                             v: Dict[str, np.ndarray]) -> None:
+        """Vectorized assembly: numpy scatter/gather over per-request
+        arrays cached on ``Request`` (``token_array`` / ``slot_array``)
+        into the packed-buffer views ``v``; Python loops run only over
+        requests (≤ R prefills + B decodes), never over tokens."""
+        e = self.ecfg
+        bs = e.page_size
+        R, QP, B, NP = e.max_prefills, e.max_chunk, e.max_decodes, \
+            e.max_blocks_per_seq
+        tokens = v["tokens"]
+        positions = v["positions"]
+        valid = v["valid"]
+        write_slot = v["write_slot"]
+        write_off = v["write_off"]
+        bt_pre = v["bt_pre"].reshape(R, NP)
+        ctx_pre = v["ctx_pre"]
+        qlens = v["qlens"]
+        bt_dec = v["bt_dec"].reshape(B, NP)
+        ctx_dec = v["ctx_dec"]
+        ctx_dec[:] = 1
+        sel = v["sel"]
+
+        assert len(plan.prefills) <= R and len(plan.decodes) <= B
+        for r, chunk in enumerate(plan.prefills):
+            req = chunk.req
+            pos = np.asarray(chunk.positions, np.int32)
+            n = pos.shape[0]
+            assert n <= QP, (n, QP)
+            base = r * QP
+            slots = req.slot_array()
+            tokens[base:base + n] = req.token_array()[pos]
+            positions[base:base + n] = pos
+            valid[base:base + n] = True
+            write_slot[base:base + n] = slots[pos // bs]
+            write_off[base:base + n] = pos % bs
+            qlens[r] = n
+            ctx_pre[r] = pos[-1] + 1
+            k = min(NP, slots.shape[0])
+            bt_pre[r, :k] = slots[:k]
+            sel[r] = base + n - 1
+
+        nd = len(plan.decodes)
+        if nd:
+            p = np.fromiter(
+                (req.prompt_len + len(req.generated) - 1
+                 for req in plan.decodes), np.int32, nd)
+            tokens[R * QP:R * QP + nd] = np.fromiter(
+                (req.generated[-1] for req in plan.decodes), np.int32, nd)
+            positions[R * QP:R * QP + nd] = p
+            valid[R * QP:R * QP + nd] = True
+            write_slot[R * QP:R * QP + nd] = np.fromiter(
+                (req.slot_array()[pi // bs]
+                 for req, pi in zip(plan.decodes, p)), np.int32, nd)
+            write_off[R * QP:R * QP + nd] = p % bs
+            ctx_dec[:nd] = p + 1
+            for i, req in enumerate(plan.decodes):
+                slots = req.slot_array()
+                k = min(NP, slots.shape[0])
+                bt_dec[i, :k] = slots[:k]
+            sel[R:R + nd] = R * QP + np.arange(nd, dtype=np.int32)
+
+    def _assemble_legacy(self, plan: StepPlan) -> Dict[str, np.ndarray]:
+        """Original per-token Python-loop assembly (reference / baseline)."""
         e = self.ecfg
         bs = e.page_size
         R, QP, B, NP = e.max_prefills, e.max_chunk, e.max_decodes, \
@@ -163,15 +391,92 @@ class Engine:
                 bt_dec[i, b] = 0 if s is None else s
             sel[R + i] = row
 
-        return {k: jnp.asarray(v) for k, v in dict(
+        return dict(
             tokens=tokens, positions=positions, valid=valid,
             write_slot=write_slot, write_off=write_off,
             bt_pre=bt_pre, ctx_pre=ctx_pre, qlens=qlens,
-            bt_dec=bt_dec, ctx_dec=ctx_dec, sel=sel).items()}
+            bt_dec=bt_dec, ctx_dec=ctx_dec, sel=sel)
+
+    def _fold_page_ops(
+            self, views: Optional[Dict[str, np.ndarray]] = None,
+    ) -> Dict[str, np.ndarray]:
+        """Drain queued COW copies / host-tier swap-ins into padded index
+        arrays for the jitted step (swap padding: dst == num_pages,
+        dropped by the scatter); overflow past the static buckets goes
+        eager.  With ``views`` the index fields are written in place into
+        the packed buffer (vectorized path)."""
+        e = self.ecfg
+        bs = e.page_size
+        P = e.num_pages
+        C, S = e.max_instep_copies, e.max_instep_swaps
+        copies, self._pending_copies = self._pending_copies, []
+        if len(copies) > C:
+            # eager overflow fallback.  Eager copies run against the
+            # pools BEFORE this step, so any queued swap-ins (which would
+            # otherwise land inside the step, i.e. after the copy reads
+            # its donor) must be flushed eagerly first — a same-round
+            # swap-in may be the donor of one of these forks
+            swaps, self._pending_swaps = self._pending_swaps, []
+            for slot, payload in swaps:
+                self.swap_in(slot, payload)
+            self.copy_pages(copies[C:])
+            copies = copies[:C]
+        # padding repeats the last real copy (idempotent: sources never
+        # alias destinations) or is the identity 0 -> 0 on copy-free steps
+        pad_src, pad_dst = copies[-1] if copies else (0, 0)
+        if views is not None:
+            copy_src, copy_dst = views["copy_src"], views["copy_dst"]
+            copy_src[:] = pad_src
+            copy_dst[:] = pad_dst
+        else:
+            copy_src = np.full((C,), pad_src, np.int32)
+            copy_dst = np.full((C,), pad_dst, np.int32)
+        for j, (src, dst) in enumerate(copies):
+            copy_src[j] = src
+            copy_dst[j] = dst
+
+        swaps, self._pending_swaps = self._pending_swaps, []
+        if len(swaps) > S:
+            for slot, payload in swaps[S:]:       # eager overflow fallback
+                self.swap_in(slot, payload)
+            swaps = swaps[:S]
+        if views is not None:
+            swap_dst = views["swap_dst"]
+            swap_dst[:] = P
+        else:
+            swap_dst = np.full((S,), P, np.int32)
+        if not swaps:
+            # swap-free step (the common case): all destinations padded
+            # out of range, so the payload content is irrelevant — reuse
+            # the device-resident zero payload instead of allocating and
+            # transferring fresh host buffers every step
+            return dict(copy_src=copy_src, copy_dst=copy_dst,
+                        swap_dst=swap_dst,
+                        swap_k=self._zero_swap, swap_v=self._zero_swap)
+        L = self.cfg.n_layers
+        dt = np.dtype(self.cfg.dtype)
+        swap_k = np.zeros((L, S, bs, self.cfg.n_kv_heads,
+                           self.cfg.head_dim), dt)
+        swap_v = np.zeros_like(swap_k)
+        for j, (slot, (pk, pv)) in enumerate(swaps):
+            swap_dst[j] = slot
+            swap_k[:, j] = pk
+            swap_v[:, j] = pv
+
+        return dict(copy_src=copy_src, copy_dst=copy_dst,
+                    swap_dst=swap_dst, swap_k=swap_k, swap_v=swap_v)
 
     # -- copy-on-write page forks (cross-request prefix sharing) --------
+    def queue_copies(self, pairs: List[Tuple[int, int]]) -> None:
+        """Queue COW page copies ``src -> dst`` to be folded into the next
+        dispatched step (before its attention reads the forked pages)."""
+        self._pending_copies.extend(pairs)
+
     def copy_pages(self, pairs: List[Tuple[int, int]]) -> None:
-        """Device-side K/V page copies ``src -> dst`` across all layers.
+        """Eager device-side K/V page copies ``src -> dst`` (all layers).
+
+        Kept as the overflow fallback when a round queues more forks than
+        ``max_instep_copies``; the pipelined path uses ``queue_copies``.
 
         Shared *full* blocks need no copying — the block manager hands the
         same slot to several requests and ``build_inputs`` simply maps that
@@ -188,19 +493,48 @@ class Engine:
 
     # -- host-tier swaps (paper §7 hierarchical storage) ----------------
     def swap_out(self, slot: int):
-        """Copy one block's K/V (all layers) device -> host."""
+        """Copy one block's K/V (all layers) device -> host.
+
+        ``np.asarray`` waits for any in-flight step that writes the pool,
+        so pipelined execution cannot hand out stale pages."""
         return (np.asarray(self.k_pools[:, slot]),
                 np.asarray(self.v_pools[:, slot]))
 
+    def queue_swap_in(self, slot: int, payload) -> None:
+        """Queue a host-tier payload to be scattered into ``slot`` inside
+        the next dispatched step (the one whose attention first reads it).
+        Falls back to the eager path when the in-step bucket is disabled."""
+        if self.ecfg.max_instep_swaps <= 0:
+            self.swap_in(slot, payload)
+        else:
+            self._pending_swaps.append((slot, payload))
+
     def swap_in(self, slot: int, payload) -> None:
+        """Eager host -> device restore (overflow / bucket-disabled path)."""
         k, v = payload
         self.k_pools = self.k_pools.at[:, slot].set(jnp.asarray(k))
         self.v_pools = self.v_pools.at[:, slot].set(jnp.asarray(v))
 
-    def execute(self, plan: StepPlan) -> np.ndarray:
-        """Run one step; returns logits for the R+B selection rows."""
+    # ------------------------------------------------------------------
+    def dispatch(self, plan: StepPlan) -> StepHandle:
+        """Assemble and launch one step WITHOUT waiting for the device.
+
+        Returns a :class:`StepHandle` over the device-side results; the
+        pools advance immediately to the (asynchronous) step outputs, so a
+        subsequent ``dispatch`` is ordered after this step by data
+        dependency — the basis of the one-step-deep pipeline."""
+        t0 = time.perf_counter()
         inp = self.build_inputs(plan)
-        logits, self.k_pools, self.v_pools = self._step(
+        t_asm = time.perf_counter() - t0
+        token_ids, pre_logits, self.k_pools, self.v_pools = self._step(
             self.params, self.k_pools, self.v_pools, inp)
         self.steps_executed += 1
-        return np.asarray(logits)
+        return StepHandle(token_ids=token_ids, prefill_logits=pre_logits,
+                          assembly_time=t_asm,
+                          full_logits=self.ecfg.return_full_logits)
+
+    def execute(self, plan: StepPlan) -> StepHandle:
+        """Synchronous convenience wrapper: dispatch + wait."""
+        handle = self.dispatch(plan)
+        handle.block()
+        return handle

@@ -13,6 +13,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+import numpy as np
+
 
 class RequestState(enum.Enum):
     WAITING = 0
@@ -39,9 +41,22 @@ class Request:
     state: RequestState = RequestState.WAITING
     block_slots: List[Optional[int]] = field(default_factory=list)
     hit_mask: List[bool] = field(default_factory=list)
-    compute_list: List[int] = field(default_factory=list)  # logical positions
+    # logical positions to (re)compute; np.int32 array after admission so
+    # step assembly can slice/index it without per-token Python loops
+    compute_list: np.ndarray = field(
+        default_factory=lambda: np.zeros((0,), np.int32))
     compute_ptr: int = 0
     generated: List[int] = field(default_factory=list)
+    # device-side greedy samples (argmax token id) observed at each step
+    # this request owned a selection row (prefill completion + every
+    # decode).  Outputs stay teacher-forced; these are recorded for
+    # pipelined-vs-synchronous equivalence checks and sampling stats.
+    sampled_ids: List[int] = field(default_factory=list)
+    # persistent step-assembly caches (engine-maintained): token ids as a
+    # growing np.int32 array and the block->pool-slot map as np.int32
+    _tok_arr: Optional[np.ndarray] = field(default=None, repr=False)
+    _tok_len: int = field(default=0, repr=False)
+    _slot_arr: Optional[np.ndarray] = field(default=None, repr=False)
     # positions computed this step whose logits we need (prefill completion)
     # -- metrics --------------------------------------------------------------
     admitted_at: float = math.nan
@@ -59,6 +74,48 @@ class Request:
     @property
     def all_tokens(self) -> List[int]:
         return self.prompt_tokens + self.generated
+
+    # -- step-assembly caches ------------------------------------------------
+    def token_array(self) -> np.ndarray:
+        """``all_tokens`` as an np.int32 array, extended incrementally.
+
+        The prompt is materialized once; each decode step appends O(1)
+        amortized.  Valid data lives in ``[:prompt_len + len(generated)]``;
+        callers index it by logical position."""
+        n_prompt = len(self.prompt_tokens)
+        n = n_prompt + len(self.generated)
+        a = self._tok_arr
+        if a is None:
+            a = np.empty((max(self.target_len, n, 1),), np.int32)
+            a[:n_prompt] = self.prompt_tokens
+            self._tok_arr = a
+            self._tok_len = n_prompt
+        if a.shape[0] < n:
+            grown = np.empty((max(2 * a.shape[0], n),), np.int32)
+            grown[:self._tok_len] = a[:self._tok_len]
+            self._tok_arr = a = grown
+        if self._tok_len < n:
+            a[self._tok_len:n] = self.generated[self._tok_len - n_prompt:]
+            self._tok_len = n
+        return a
+
+    def slot_array(self) -> np.ndarray:
+        """``block_slots`` as np.int32 (None -> 0), cached after admission.
+
+        Blocks are allocated up-front in ``ChunkingScheduler._admit`` and
+        never reassigned while the request runs, so this is built once per
+        admission; ``reset_assembly_caches`` invalidates it."""
+        a = self._slot_arr
+        if a is None or a.shape[0] != len(self.block_slots):
+            a = np.fromiter((0 if s is None else s for s in self.block_slots),
+                            np.int32, len(self.block_slots))
+            self._slot_arr = a
+        return a
+
+    def reset_assembly_caches(self) -> None:
+        self._tok_arr = None
+        self._tok_len = 0
+        self._slot_arr = None
 
     @property
     def prompt_len(self) -> int:

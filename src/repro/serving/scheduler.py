@@ -18,6 +18,8 @@ import math
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.block_manager import BlockManager
 from repro.serving.request import Request, RequestState
 
@@ -25,7 +27,7 @@ from repro.serving.request import Request, RequestState
 @dataclass
 class PrefillChunk:
     req: Request
-    positions: List[int]          # logical positions computed this step
+    positions: np.ndarray         # logical positions computed this step
     completes_prefill: bool
 
 
@@ -133,22 +135,27 @@ class ChunkingScheduler:
                     req.n_cow_forks += 1
                     cow_block, cow_until = b, matched
 
-        compute = []
-        for p in range(req.prompt_len):
-            b = p // bs
-            cached = (b < n_prompt_blocks
-                      and (m.hit_mask[b] or b in swapped)) \
-                or (b == cow_block and p < cow_until)
-            if not cached:
-                compute.append(p)
+        # vectorized compute-list: a prompt position is cached when its
+        # block is a device hit / swap-in, or it falls inside the COW'd
+        # span of the forked partial block
+        blk_cached = np.zeros((total_blocks,), bool)
+        if n_prompt_blocks:
+            blk_cached[:n_prompt_blocks] = req.hit_mask[:n_prompt_blocks]
+        pos = np.arange(req.prompt_len, dtype=np.int32)
+        cached = blk_cached[pos // bs]
+        if cow_block >= 0:
+            cached |= (pos // bs == cow_block) & (pos < cow_until)
+        compute = pos[~cached]
         last = req.prompt_len - 1
-        if not compute or compute[-1] != last:
-            compute.append(last)     # always recompute the sampling position
+        if compute.size == 0 or compute[-1] != last:
+            # always recompute the sampling position
+            compute = np.append(compute, np.int32(last))
         req.compute_list = compute
         req.n_prefill_compute = len(compute)
         req.compute_ptr = 0
         req.admitted_at = now
         req.state = RequestState.PREFILL
+        req.reset_assembly_caches()
         return True
 
     # ------------------------------------------------------------------
@@ -157,9 +164,13 @@ class ChunkingScheduler:
         if not c.adaptive_chunking:
             return c.max_chunk
         if n_decodes > c.decode_threshold:
-            # §5.1: many decodes -> shrink prefill chunks, floor at min_chunk
+            # §5.1: many decodes -> shrink prefill chunks, floor at min_chunk.
+            # The shrink divides by the number of co-scheduled prefill
+            # chunks too: TPOT is bounded by the step's *total* prefill
+            # tokens, so k concurrent chunks each get a k-times-smaller
+            # share of the same per-step prefill allowance.
             shrink = max(1, n_decodes - c.decode_threshold)
-            size = c.max_chunk // (1 + shrink // 4)
+            size = c.max_chunk // ((1 + shrink // 4) * max(1, n_prefills))
             return max(c.min_chunk, size)
         return c.max_chunk
 
@@ -186,8 +197,9 @@ class ChunkingScheduler:
 
         # 3. prefill chunks under the remaining token budget
         budget = c.token_budget - len(plan.decodes)
-        chunk = self._chunk_size(len(plan.decodes), 0)
         prefills = [r for r in self.running if r.state == RequestState.PREFILL]
+        chunk = self._chunk_size(len(plan.decodes),
+                                 min(len(prefills), c.max_prefills))
         for req in prefills[:c.max_prefills]:
             if budget <= 0:
                 break

@@ -8,13 +8,24 @@ Two clocks:
                         simulated clock (paper-scale latencies on Llama
                         3.1-8B/70B constants) while the engine still runs
                         for real so losslessness is preserved end to end.
+
+Overlapped execution pipeline (``pipeline_depth`` ≥ 1, the default): the
+host schedules and assembles step N+1 while the device executes step N.
+This is sound because outputs are teacher-forced — the host-side state
+update after a step (:meth:`AsymCacheServer._postprocess`) depends only on
+the plan, never on logits, so only the small logits/ids fetch
+(:meth:`_retire`) has to wait for the device, and it is deferred until
+step N+1 has already been dispatched.  ``pipeline_depth=0`` preserves the
+fully synchronous order (dispatch → wait → postprocess) for A/B runs and
+losslessness bisection; both modes execute the identical device program,
+so their logits and sampled ids match byte-for-byte.
 """
 from __future__ import annotations
 
-import math
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -29,7 +40,7 @@ from repro.core import (
     hash_seed,
     make_policy,
 )
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving.engine import Engine, EngineConfig, StepHandle
 from repro.serving.request import Request, RequestState, SessionStats
 from repro.serving.scheduler import ChunkingScheduler, SchedulerConfig, StepPlan
 
@@ -44,11 +55,16 @@ class _SimEngine:
         self.ecfg = _E()
         self.ecfg.max_prefills = sched_cfg.max_prefills
         self.steps_executed = 0
-        self._n = sched_cfg.max_prefills + sched_cfg.max_decodes
+        r, b = sched_cfg.max_prefills, sched_cfg.max_decodes
+        self._ids = np.zeros((r + b,), np.int32)
+        self._logits = np.zeros((r, 1), np.float32)
 
-    def execute(self, plan: StepPlan) -> np.ndarray:
+    def queue_copies(self, pairs) -> None:
+        pass
+
+    def dispatch(self, plan: StepPlan) -> StepHandle:
         self.steps_executed += 1
-        return np.zeros((self._n, 1), np.float32)
+        return StepHandle(token_ids=self._ids, prefill_logits=self._logits)
 
 
 @dataclass
@@ -77,6 +93,11 @@ class ServerConfig:
     # tier of this many blocks (0 = off); swap-in replaces recomputation
     host_blocks: int = 0
     pcie_bw: float = 1.2e10             # bytes/s host<->device for swaps
+    # overlapped execution: how many dispatched steps may be awaiting
+    # retirement.  0 = fully synchronous (current order preserved for A/B
+    # and losslessness tests); 1 = schedule/assemble step N+1 while step N
+    # executes (one-step-deep, the paper's §5.3 overlap assumption).
+    pipeline_depth: int = 1
     scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
     use_hit_count: bool = True
 
@@ -111,8 +132,8 @@ class AsymCacheServer:
             self.engine = Engine(cfg, ecfg, params)
             if scfg.host_blocks > 0:
                 self.bm.swap_out_fn = lambda slot: self.engine.swap_out(slot)
-                self.bm.swap_in_fn = lambda slot, pl: self.engine.swap_in(
-                    slot, pl)
+                self.bm.swap_in_fn = lambda slot, pl: \
+                    self.engine.queue_swap_in(slot, pl)
         else:
             assert scfg.clock == "model", "simulation requires clock='model'"
             self.engine = _SimEngine(scfg.scheduler)
@@ -163,7 +184,7 @@ class AsymCacheServer:
         w = cm.eff_window
         lat = cm.beta
         for c in plan.prefills:
-            pos_sum = sum(min(p, w) for p in c.positions)
+            pos_sum = int(np.minimum(c.positions, w).sum())
             lat += k2 * len(c.positions) + k5 * pos_sum
         for r in plan.decodes:
             ctx = r.prompt_len + len(r.generated)
@@ -176,13 +197,21 @@ class AsymCacheServer:
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], max_steps: int = 200_000) -> Dict:
-        """Discrete-event main loop over a scripted workload."""
+        """Discrete-event main loop over a scripted workload.
+
+        With ``pipeline_depth`` ≥ 1 each iteration dispatches step N+1
+        before retiring step N: the scripted state update runs immediately
+        after dispatch (it never looks at logits), and the handle joins
+        ``inflight`` until the pipeline is full, at which point the oldest
+        step's ids/prefill-logit rows are fetched — by then the device has
+        been executing it for a whole scheduling round."""
         pending = sorted(requests, key=lambda r: r.arrival)
         next_arrival = 0
-        e = self.engine.ecfg
-        R = e.max_prefills
+        depth = max(0, int(self.scfg.pipeline_depth))
+        inflight: Deque[Tuple[StepPlan, StepHandle]] = deque()
         steps = 0
         t_run0 = time.perf_counter()
+        t_last_dispatch = t_run0
 
         while (next_arrival < len(pending) or self.sched.waiting
                or self.sched.running) and steps < max_steps:
@@ -214,23 +243,42 @@ class AsymCacheServer:
                         f"({self.scfg.num_blocks} blocks)")
                 break
 
-            # copy-on-write forks queued during admission must land before
-            # the step reads the forked pages as attention context
+            # copy-on-write forks queued during admission are folded into
+            # the step about to be dispatched — they land before its
+            # attention reads the forked pages, and the donor slots can be
+            # released as soon as the step is in flight (any later write to
+            # a re-allocated donor page is ordered after it by the data
+            # dependency between consecutive steps' donated pools)
             copies = self.bm.drain_pending_copies()
             if copies:
-                if hasattr(self.engine, "copy_pages"):
-                    self.engine.copy_pages(copies)
+                self.engine.queue_copies(copies)
                 self.bm.release([s for s, _ in copies], self.now)
 
             t1 = time.perf_counter()
-            logits = self.engine.execute(plan)
-            exec_time = time.perf_counter() - t1
-            step_latency = exec_time if self.scfg.clock == "wall" \
-                else self._step_latency(plan)
-            self.now += step_latency
+            handle = self.engine.dispatch(plan)
+            self.control_plane_time += handle.assembly_time
+
+            if depth == 0:
+                handle.block()     # synchronous order: wait for the device
+            if self.scfg.clock == "model":
+                self.now += self._step_latency(plan)
+            elif depth == 0:
+                self.now += time.perf_counter() - t1
+            else:
+                # pipelined wall clock: the step's cost is the dispatch-to-
+                # dispatch interval (host and device work overlap inside it)
+                t_now = time.perf_counter()
+                self.now += t_now - t_last_dispatch
+            t_last_dispatch = time.perf_counter()
             steps += 1
 
-            self._postprocess(plan, logits)
+            self._postprocess(plan)
+            inflight.append((plan, handle))
+            while len(inflight) > depth:
+                self._retire(*inflight.popleft())
+
+        while inflight:                # drain the pipeline
+            self._retire(*inflight.popleft())
         wall = time.perf_counter() - t_run0
 
         out = self.stats.summary()
@@ -252,29 +300,55 @@ class AsymCacheServer:
     def _on_arrival(self, req: Request) -> None:
         self.sched.submit(req)
 
-    def _postprocess(self, plan: StepPlan, logits: np.ndarray) -> None:
-        e = self.engine.ecfg
-        R = e.max_prefills
+    def _postprocess(self, plan: StepPlan) -> None:
+        """Host-side state update for a *dispatched* step.
+
+        Outputs are teacher-forced, so nothing here reads logits — which
+        is exactly what makes the one-step-deep overlap legal: the next
+        step can be scheduled against fully updated host state while the
+        device is still executing this one.  The logits/ids fetch lives in
+        :meth:`_retire`."""
         for r, chunk in enumerate(plan.prefills):
             req = chunk.req
-            self._commit_ready_blocks(req, chunk.positions[-1] + 1)
+            self._commit_ready_blocks(req, int(chunk.positions[-1]) + 1)
             if chunk.completes_prefill:
                 req.state = RequestState.DECODE
                 req.first_token_at = self.now
-                req.first_logits = logits[r].copy()
                 if req.hash_salt == 0:
                     # prompt is now resident: index it for prefix sharing
                     self.bm.register_prefix(req.prompt_tokens)
                 req.generated.append(int(req.output_script[0]))
                 if len(req.output_script) <= 1:
                     self._finish(req)
-        for i, req in enumerate(plan.decodes):
+        for req in plan.decodes:
             p = req.prompt_len + len(req.generated) - 1
             if (p + 1) % self.scfg.block_size == 0:
                 self._commit_ready_blocks(req, p + 1)
             req.generated.append(int(req.output_script[len(req.generated)]))
             if req.decode_done:
                 self._finish(req)
+
+    def _retire(self, plan: StepPlan, handle: StepHandle) -> None:
+        """Fetch a completed step's device results: greedy sample ids for
+        every selection row and the prefill logit rows for requests whose
+        prefill completed (losslessness validation)."""
+        R = self.engine.ecfg.max_prefills
+        ids = handle.token_ids_np()
+        # pipelined wall clock: at _postprocess time the clock had not yet
+        # absorbed this step's device execution (it is billed to the next
+        # dispatch-to-dispatch interval); by retirement it has, so re-stamp
+        # first_token_at here to keep TTFT comparable with depth-0 runs
+        restamp = (self.scfg.clock == "wall"
+                   and self.scfg.pipeline_depth > 0)
+        for r, chunk in enumerate(plan.prefills):
+            if chunk.completes_prefill:
+                req = chunk.req
+                req.first_logits = handle.prefill_logits_np()[r].copy()
+                req.sampled_ids.append(int(ids[r]))
+                if restamp:
+                    req.first_token_at = self.now
+        for i, req in enumerate(plan.decodes):
+            req.sampled_ids.append(int(ids[R + i]))
 
     def _finish(self, req: Request) -> None:
         # §5.1 online lifespan: feed actual per-block reuse intervals

@@ -75,9 +75,12 @@ def test_eviction_actually_happens(small_model):
 
 def test_multi_segment_hits_occur(small_model):
     """Under memory pressure AsymCache must produce non-prefix hit
-    patterns (a hit segment after a gap) — the MSA case."""
+    patterns (a hit segment after a gap) — the MSA case.  clock="model"
+    keeps the eviction sequence (and thus the hit pattern) deterministic
+    regardless of host speed."""
     cfg, params = small_model
-    wl, res, srv = _run(cfg, params, num_blocks=40, n_sessions=4)
+    wl, res, srv = _run(cfg, params, num_blocks=40, n_sessions=4,
+                        clock="model")
     multi_seg = sum(
         1 for r in wl
         if any(not h1 and h2 for h1, h2 in zip(r.hit_mask, r.hit_mask[1:])))
@@ -154,10 +157,11 @@ def test_continuum_pinning_improves_agentic_hits(small_model):
 
 
 def test_asymcache_hits_trailing_blocks(small_model):
-    """Position-aware eviction retains suffix blocks that LRU drops."""
+    """Position-aware eviction retains suffix blocks that LRU drops.
+    clock="model" keeps the eviction sequence deterministic."""
     cfg, params = small_model
     wl_a, res_a, _ = _run(cfg, params, policy="asymcache", num_blocks=48,
-                          n_sessions=4, seed=2)
+                          n_sessions=4, seed=2, clock="model")
     # AsymCache suffix retention: some request has a hit AFTER a miss
     suffix_hits = sum(
         1 for r in wl_a
