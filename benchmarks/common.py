@@ -106,6 +106,17 @@ def pressured_server(policy: str, wl, pressure: float = 0.2,
     return paper_scale_server(policy, cache_tokens=cache_tokens, **kw)
 
 
+def write_bench_json(name: str, payload: Dict) -> str:
+    """Persist a benchmark's metrics as ``BENCH_<name>.json`` in the
+    working directory — CI uploads ``BENCH_*.json`` as workflow
+    artifacts so the perf trajectory is tracked across PRs."""
+    import json
+    path = f"BENCH_{name}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+    return path
+
+
 class Rows:
     """CSV accumulation in the scaffold's ``name,us_per_call,derived``."""
 

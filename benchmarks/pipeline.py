@@ -44,7 +44,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import Rows
+from benchmarks.common import Rows, write_bench_json
 
 NUM_BLOCKS = 192
 
@@ -60,9 +60,14 @@ def _mk_server(cfg, params, overlapped: bool):
     from repro.serving import (AsymCacheServer, EngineConfig,
                                SchedulerConfig, ServerConfig,
                                WorkloadConfig, multi_turn_workload)
+    # BOTH arms run the split two-dispatch attention layout so this A/B
+    # isolates the pipeline (its single variable); the fused-vs-split
+    # attention comparison has its own dedicated gates in
+    # benchmarks/kernel_fusion.py
     scfg = ServerConfig(
         policy="asymcache", num_blocks=NUM_BLOCKS, block_size=16,
         clock="model", pipeline_depth=1 if overlapped else 0,
+        attn_mode="split",
         scheduler=SchedulerConfig(token_budget=256, max_chunk=128,
                                   max_prefills=2, max_decodes=24,
                                   max_running=64))
@@ -70,6 +75,7 @@ def _mk_server(cfg, params, overlapped: bool):
         num_pages=NUM_BLOCKS, page_size=16, max_prefills=2, max_chunk=128,
         max_decodes=24, max_blocks_per_seq=16,
         assembly="vectorized" if overlapped else "legacy",
+        attn_mode="split",
         return_full_logits=not overlapped,
         max_instep_copies=8 if overlapped else 0,
         max_instep_swaps=0)
@@ -142,6 +148,17 @@ def main(smoke: bool = False, n_sessions: int = 12, seed: int = 5) -> Rows:
              f"best={best_speedup:.2f};byte_identical={byte_identical}")
     rows.add("pipeline/control_plane_speedup", ctrl_speedup,
              "x_less_serialized_host_time_per_step")
+
+    write_bench_json("pipeline", {
+        "byte_identical": byte_identical,
+        "steps_per_sec": {"sync": sync_sps, "overlapped": pipe_sps},
+        "steps_per_sec_speedup_median": speedup,
+        "steps_per_sec_speedup_best": best_speedup,
+        "control_plane_ms_per_step": {"sync": 1e3 * sync_ctrl,
+                                      "overlapped": 1e3 * pipe_ctrl},
+        "control_plane_speedup_median": ctrl_speedup,
+        "smoke": smoke,
+    })
 
     assert byte_identical, "pipelined run changed outputs (lossy!)"
     # end-to-end gate: the overlapped pipeline must never be slower.

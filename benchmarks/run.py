@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   (ours)      roofline_report    dry-run three-term roofline table
   (ours)      prefix_sharing     cross-request sharing vs no-sharing
   (ours)      pipeline           overlapped pipeline vs synchronous loop
+  Fig. 13     kernel_fusion      fused varlen dispatch vs two-dispatch
 """
 import argparse
 import sys
@@ -30,6 +31,7 @@ MODULES = [
     ("roofline_report", {}),
     ("prefix_sharing", {}),
     ("pipeline", {}),
+    ("kernel_fusion", {}),
 ]
 
 

@@ -1,10 +1,13 @@
+from repro.kernels.msa.msa_fused import WL_FIELDS, build_worklist, pad_worklist
 from repro.kernels.msa.ops import (
     apply_page_copies,
     apply_swap_ins,
     msa_decode,
+    msa_fused,
     msa_prefill,
     write_kv_pages,
 )
 
-__all__ = ["apply_page_copies", "apply_swap_ins", "msa_decode",
-           "msa_prefill", "write_kv_pages"]
+__all__ = ["apply_page_copies", "apply_swap_ins", "build_worklist",
+           "msa_decode", "msa_fused", "msa_prefill", "pad_worklist",
+           "write_kv_pages", "WL_FIELDS"]

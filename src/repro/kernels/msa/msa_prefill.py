@@ -57,6 +57,7 @@ def _msa_prefill_kernel(
     q_tile: int,
 ):
     r = pl.program_id(0)
+    qt = pl.program_id(2)
     j = pl.program_id(3)
 
     @pl.when(j == 0)
@@ -67,11 +68,22 @@ def _msa_prefill_kernel(
 
     ctx = context_lens[r]
     qpos = q_pos_ref[0, :]                       # (TQ,)
+    # q rows at padded indices >= q_lens[r] carry qpos 0; they must not
+    # attend (the ref zeroes them) and must not drag the tile's position
+    # range — a padding qpos of 0 would pull `lo` to the bottom of the
+    # sequence and defeat the sliding-window page skip
+    rows = qt * q_tile + jax.lax.broadcasted_iota(
+        jnp.int32, (q_tile, 1), 0)               # (TQ, 1)
+    qvalid = rows < q_lens[r]
     kv_base = j * page
     # page needed iff it starts inside the context and inside the causal
-    # horizon of this q tile (and, under a sliding window, not fully below it)
-    horizon = jnp.max(qpos)
-    lo = jnp.min(qpos) - window + 1 if window > 0 else 0
+    # horizon of the tile's VALID rows (and, under a sliding window, not
+    # fully below their window band); an all-padding tile skips every
+    # page and emits exact zeros
+    qpos_v = jnp.where(qvalid[:, 0], qpos, -1)
+    horizon = jnp.max(qpos_v)
+    lo = (jnp.min(jnp.where(qvalid[:, 0], qpos, jnp.int32(2**30)))
+          - window + 1) if window > 0 else 0
 
     @pl.when((kv_base < ctx) & (kv_base <= horizon) & (kv_base + page > lo))
     def _compute():
@@ -88,7 +100,7 @@ def _msa_prefill_kernel(
 
         kv_pos = kv_base + jax.lax.broadcasted_iota(jnp.int32, (q_tile, page), 1)
         rel = qpos[:, None] - kv_pos
-        mask = (rel >= 0) & (kv_pos < ctx)
+        mask = qvalid & (rel >= 0) & (kv_pos < ctx)
         if window > 0:
             mask = mask & (rel < window)
         s = jnp.where(mask, s, NEG_INF)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels.msa import ref
 from repro.kernels.msa.msa_decode import msa_decode_pallas
+from repro.kernels.msa.msa_fused import msa_fused_pallas
 from repro.kernels.msa.msa_prefill import msa_prefill_pallas
 
 DEFAULT_IMPL = "xla"  # CPU container default; TPU deployments use "pallas"
@@ -30,11 +31,39 @@ def msa_prefill(q, k_pages, v_pages, block_tables, context_lens, q_pos,
     interpret = impl == "pallas_interpret"
     qp = q.shape[1]
     q_tile = min(q_tile, qp)
-    if qp % q_tile:
-        raise ValueError(f"QP={qp} not a multiple of q_tile={q_tile}")
-    return msa_prefill_pallas(q, k_pages, v_pages, block_tables, context_lens,
-                              q_pos, q_lens, window=window, softcap=softcap,
-                              q_tile=q_tile, interpret=interpret)
+    qp_pad = -(-qp // q_tile) * q_tile
+    if qp_pad != qp:
+        # ragged QP is legal: round up to the tile with masked padding
+        # rows (qpos 0, beyond q_lens — the kernel zeroes them) and slice
+        # the pad back off
+        q = jnp.pad(q, ((0, 0), (0, qp_pad - qp), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, qp_pad - qp)))
+    out = msa_prefill_pallas(q, k_pages, v_pages, block_tables, context_lens,
+                             q_pos, q_lens, window=window, softcap=softcap,
+                             q_tile=q_tile, interpret=interpret)
+    return out[:, :qp]
+
+
+def msa_fused(q, k_pages, v_pages, block_tables, context_lens, q_pos,
+              seq_ids, q_valid, *, q_start=None, q_len=None, worklist=None,
+              window: int = 0, softcap: float = 0.0, q_tile: int = 128,
+              impl: str = DEFAULT_IMPL) -> jax.Array:
+    """One fused dispatch over the flattened (T, H, D) mixed token stream
+    (prefill chunks + decode rows).  The xla oracle resolves each token's
+    context through ``seq_ids``; the Pallas kernel iterates the compacted
+    work-list (``msa_fused.build_worklist``) with per-sequence
+    ``q_start``/``q_len`` runs."""
+    if impl == "xla":
+        return ref.msa_fused_ref(q, k_pages, v_pages, block_tables,
+                                 context_lens, q_pos, seq_ids, q_valid,
+                                 window=window, softcap=softcap)
+    if q_start is None or q_len is None or worklist is None:
+        raise ValueError("pallas msa_fused needs q_start/q_len + worklist")
+    interpret = impl == "pallas_interpret"
+    return msa_fused_pallas(q, k_pages, v_pages, q_start, q_len, q_pos,
+                            context_lens, *worklist, window=window,
+                            softcap=softcap, q_tile=q_tile,
+                            interpret=interpret)
 
 
 def msa_decode(q, k_pages, v_pages, block_tables, context_lens, *,

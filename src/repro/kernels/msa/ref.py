@@ -86,6 +86,37 @@ def msa_prefill_ref(
     return out.reshape(r, qp, h, d).astype(q.dtype)
 
 
+def msa_fused_ref(
+    q: jax.Array,              # (T, H, D) flattened mixed token stream
+    k_pages: jax.Array,        # (P, page, KH, D)
+    v_pages: jax.Array,
+    block_tables: jax.Array,   # (N, NP) int32 — one row per sequence
+    context_lens: jax.Array,   # (N,) int32
+    q_pos: jax.Array,          # (T,) int32 logical position per token
+    seq_ids: jax.Array,        # (T,) int32 — owning sequence row per token
+    q_valid: jax.Array,        # (T,) bool — padding rows are False
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Varlen oracle for the fused mixed-batch MSA dispatch.
+
+    Prefill chunks and decode rows share one flattened ``(T, H, D)``
+    stream; each token resolves its paged context through its sequence's
+    row of ``block_tables``.  Implemented by delegation to
+    :func:`msa_prefill_ref` viewed as T single-token requests — every
+    per-token reduction (scores over D, softmax over S, weighted sum
+    over S) runs over identical operands in identical order, so the
+    fused stream is *bitwise* equal to the padded two-dispatch layout
+    on every valid row (invalid rows are zeros, as in the padded ref)."""
+    out = msa_prefill_ref(
+        q[:, None], k_pages, v_pages,
+        block_tables[seq_ids], context_lens[seq_ids],
+        q_pos[:, None], q_valid.astype(jnp.int32),
+        window=window, softcap=softcap)
+    return out[:, 0]
+
+
 def msa_decode_ref(
     q: jax.Array,              # (B, H, D)
     k_pages: jax.Array,        # (P, page, KH, D)

@@ -3,10 +3,25 @@ multi-segment prefill chunks and decode tokens (paper §4.1/§5.3).
 
 All prefill chunks and decode rows share one token stream for the
 non-attention layers (paper: "hidden states of two segments can directly
-be concatenated when computing MLP and LayerNorm"), and attention runs as
-two kernel dispatches over the same paged KV pool — the Pallas MSA
-prefill kernel and the paged flash-decode kernel.  Shapes are static
-(padded to the engine's buckets) so the step compiles exactly once.
+be concatenated when computing MLP and LayerNorm"), and — in the default
+``attn_mode="fused"`` — attention runs as **one** kernel dispatch per
+layer over the same paged KV pool: the flattened varlen ``(T, H, D)``
+stream with per-sequence ``q_start``/``q_len`` runs replaces the padded
+``(R, QP, H, D)`` prefill layout, and decode rows are simply runs of
+length 1 (the single fused dispatch the paper identifies as essential,
+Fig. 13).  ``attn_mode="split"`` keeps the original two-dispatch layout
+(padded MSA prefill + paged flash-decode) as the tested baseline.
+
+Step shapes are static per **occupancy bucket**: instead of one maximal
+``(R, QP, B, NP)`` compile shape, the fused layout compiles once per
+``(t_bucket, np_bucket)`` drawn from a small lattice (default
+``T ∈ {B, Tmax/16, Tmax/8, Tmax/4, Tmax/2, Tmax}`` ×
+``NP ∈ {NPmax/4, NPmax}``), selected
+per step by the scheduler from its §5.1 chunk decision — decode-only
+steps stop paying for the full prefill allowance and short contexts stop
+streaming the full page table.  The jit cache *is* the
+compile-once-per-bucket cache (bucket dims are static argnums);
+``jit_traces`` must equal ``len(buckets_used)``.
 
 Overlapped pipeline support (one-step-deep, see docs/ARCHITECTURE.md):
 
@@ -25,6 +40,12 @@ Overlapped pipeline support (one-step-deep, see docs/ARCHITECTURE.md):
     step as padded ``(src, dst)`` index arrays; overflow past the static
     buckets falls back to the eager paths so shapes stay static.
 
+Deterministic accounting (host wall-clock drifts on shared CPU
+containers, so the fused-dispatch win is gated on exact counters, see
+``benchmarks/kernel_fusion.py``): the engine counts attention dispatches
+(``L`` fused vs ``2L`` split per step), valid vs total token rows
+(padded-token fraction), and per-bucket step counts.
+
 Engine scope: decoder-only token LMs (dense / MoE / sliding-window mixes).
 SSM-family archs have no evictable KV cache (DESIGN.md §Arch-applicability)
 and are served by the dense decode path in ``repro.models`` instead.
@@ -41,15 +62,28 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.kernels.msa import (
+    WL_FIELDS,
     apply_page_copies,
     apply_swap_ins,
+    build_worklist,
     msa_decode,
+    msa_fused,
     msa_prefill,
+    pad_worklist,
     write_kv_pages,
 )
 from repro.models.layers import apply_rope, moe_ffn_local, rms_norm, swiglu_mlp
 from repro.models.model import _layer_windows
 from repro.serving.scheduler import StepPlan
+
+# minimum work-list bucket (fused Pallas path only); lengths round up to
+# the next power of two above this, so the per-W jit variants are at
+# most log2(Wmax) many.  The xla oracle ships no work-list (W = 0).
+WL_BUCKET = 64
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
 
 
 @dataclass(frozen=True)
@@ -62,6 +96,23 @@ class EngineConfig:
     max_blocks_per_seq: int = 64   # NP
     attn_impl: str = "xla"         # "xla" | "pallas" | "pallas_interpret"
     q_tile: int = 128
+    # "fused": one varlen attention dispatch per layer over the flattened
+    # (T, H, D) mixed stream, with the occupancy bucket lattice.
+    # "split": the original padded two-dispatch layout (prefill + decode),
+    # kept as the byte-identical baseline benchmarks compare against.
+    # Byte-identity scope: dense and dropless MoE models.  MoE with
+    # dropless=False derives expert capacity from the step's TOTAL row
+    # count (padding included), so its drop decisions depend on the
+    # compile shape — already lossy under the split layout, and
+    # bucket-dependent under fused (moe_ffn_local documents dropless=True
+    # as required for lossless serving; the model zoo complies).
+    attn_mode: str = "fused"
+    # occupancy bucket lattices (fused mode).  Empty tuples derive the
+    # defaults {B, Tmax//16, Tmax//8, Tmax//4, Tmax//2, Tmax} (B = a
+    # decode-full bucket) and {NPmax//4, NPmax}; the maximal bucket is
+    # always included so every legal plan fits.
+    token_buckets: Tuple[int, ...] = ()
+    np_buckets: Tuple[int, ...] = ()
     # static buckets for page ops folded into the jitted step; overflow
     # falls back to the eager dispatch paths (shapes must stay static).
     # Setting a bucket to 0 routes ALL ops of that kind through the eager
@@ -72,6 +123,7 @@ class EngineConfig:
     # "legacy": the original per-token Python loops, kept as the reference
     # implementation the vectorized path is tested against and as the
     # synchronous-baseline control plane in benchmarks/pipeline.py.
+    # Legacy assembly implies the split attention layout.
     assembly: str = "vectorized"
     # True restores the pre-pipeline device interface: the step returns
     # the full (R+B, V) logits and StepHandle.block() transfers them all
@@ -130,6 +182,9 @@ class Engine:
     def __init__(self, cfg: ModelConfig, ecfg: EngineConfig, params):
         assert cfg.family in ("dense", "moe", "vlm"), cfg.family
         assert not cfg.enc_dec
+        assert ecfg.attn_mode in ("fused", "split"), ecfg.attn_mode
+        if ecfg.assembly == "legacy" and ecfg.attn_mode != "split":
+            raise ValueError("legacy assembly implies attn_mode='split'")
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
@@ -141,9 +196,13 @@ class Engine:
         self.windows = [int(w) for w in np.asarray(_layer_windows(cfg, L))]
         self._step = jax.jit(
             self._step_impl,
+            static_argnums=(4, 5, 6),
             donate_argnums=(1, 2) if ecfg.donate_pools else ())
         self.steps_executed = 0
-        self.jit_traces = 0            # trace counter: must stay at 1
+        # trace counter: must equal len(buckets_used) — the
+        # compile-once-per-bucket invariant (== 1 in split mode)
+        self.jit_traces = 0
+        self.buckets_used: set = set()
         self._pending_copies: List[Tuple[int, int]] = []
         self._pending_swaps: List[Tuple[int, object]] = []
         # device-resident zero swap payload, reused on swap-free steps
@@ -151,32 +210,118 @@ class Engine:
         self._zero_swap = jnp.zeros(
             (L, ecfg.max_instep_swaps, ecfg.page_size, cfg.n_kv_heads,
              cfg.head_dim), dt)
-        # packed-input layout (vectorized assembly): every int32 input in
-        # one flat host buffer -> ONE device_put per step instead of ~14
         R, QP, B, NP = (ecfg.max_prefills, ecfg.max_chunk,
                         ecfg.max_decodes, ecfg.max_blocks_per_seq)
-        T = R * QP + B
-        C, S = ecfg.max_instep_copies, ecfg.max_instep_swaps
-        fields = [("tokens", T), ("positions", T), ("valid", T),
-                  ("write_slot", T), ("write_off", T), ("sel", R + B),
-                  ("qlens", R), ("ctx_pre", R), ("ctx_dec", B),
-                  ("bt_pre", R * NP), ("bt_dec", B * NP),
-                  ("copy_src", C), ("copy_dst", C), ("swap_dst", S)]
-        self._pack_layout: List[Tuple[str, int, int]] = []
-        off = 0
-        for name, size in fields:
-            self._pack_layout.append((name, off, size))
-            off += size
-        self._pack_size = off
+        self.n_seqs = R + B
+        self.t_max = R * QP + B
+        if ecfg.attn_mode == "fused":
+            # default lattice: a decode-full bucket (decode-only steps
+            # are the continuous-batching common case — at full decode
+            # occupancy that bucket carries no padding at all) plus
+            # power-of-two fractions of Tmax down to Tmax/16
+            tb = ecfg.token_buckets or (
+                max(8, _round_up(B, 8)),
+                max(8, _round_up(self.t_max // 16, 8)),
+                max(8, _round_up(self.t_max // 8, 8)),
+                max(8, _round_up(self.t_max // 4, 8)),
+                max(8, _round_up(self.t_max // 2, 8)),
+            )
+            nb = ecfg.np_buckets or (max(1, NP // 4),)
+            self.token_buckets = tuple(sorted(
+                {min(self.t_max, max(1, int(t))) for t in tb}
+                | {self.t_max}))
+            self.np_buckets = tuple(sorted(
+                {min(NP, max(1, int(n))) for n in nb} | {NP}))
+        else:
+            self.token_buckets = (self.t_max,)
+            self.np_buckets = (NP,)
+        self._t_bucket_set = set(self.token_buckets)
+        self._np_bucket_set = set(self.np_buckets)
+        # deterministic accounting (benchmarks/kernel_fusion.py gates)
+        self.attn_dispatches = 0       # per-layer attention kernel launches
+        self.valid_token_rows = 0      # real compute tokens executed
+        self.total_token_rows = 0      # token rows incl. bucket padding
+        self.bucket_counts: Dict[Tuple[int, int], int] = {}
+        # packed-input layouts (vectorized assembly): every int32 input in
+        # one flat host buffer -> ONE device_put per step instead of ~14;
+        # one layout per (t_bucket, np_bucket, w_bucket)
+        self._layouts: Dict[Tuple[int, int, int],
+                            Tuple[List[Tuple[str, int, int]], int]] = {}
 
     # ------------------------------------------------------------------
-    def _step_impl(self, params, k_pools, v_pools, inp):
+    def pack_layout(self, t_bucket: int, np_bucket: int, w_bucket: int):
+        """(name, offset, size) triples of the flat int32 pack buffer for
+        one occupancy bucket (cached; trace-time and assembly agree)."""
+        key = (t_bucket, np_bucket, w_bucket)
+        cached = self._layouts.get(key)
+        if cached is not None:
+            return cached
+        e = self.ecfg
+        R, B = e.max_prefills, e.max_decodes
+        C, S = e.max_instep_copies, e.max_instep_swaps
+        if e.attn_mode == "fused":
+            t, n = t_bucket, self.n_seqs
+            fields = [("tokens", t), ("positions", t), ("valid", t),
+                      ("write_slot", t), ("write_off", t), ("seq_ids", t),
+                      ("sel", R + B), ("qstart", n), ("qlen", n),
+                      ("ctx", n), ("bt", n * np_bucket)]
+            fields += [(f, w_bucket) for f in WL_FIELDS]
+            fields += [("copy_src", C), ("copy_dst", C), ("swap_dst", S)]
+        else:
+            t, NP = self.t_max, e.max_blocks_per_seq
+            fields = [("tokens", t), ("positions", t), ("valid", t),
+                      ("write_slot", t), ("write_off", t), ("sel", R + B),
+                      ("qlens", R), ("ctx_pre", R), ("ctx_dec", B),
+                      ("bt_pre", R * NP), ("bt_dec", B * NP),
+                      ("copy_src", C), ("copy_dst", C), ("swap_dst", S)]
+        layout: List[Tuple[str, int, int]] = []
+        off = 0
+        for name, size in fields:
+            layout.append((name, off, size))
+            off += size
+        self._layouts[key] = (layout, off)
+        return layout, off
+
+    def buckets_for(self, plan: StepPlan) -> Tuple[int, int]:
+        """Resolve the step's (t_bucket, np_bucket).  The scheduler's
+        §5.1-informed selection (``plan.t_bucket``/``plan.np_bucket``) is
+        honored when it names an entry of THIS engine's lattice that fits
+        the plan; anything else (no selection, a foreign lattice from a
+        shared SchedulerConfig, a stale too-small bucket) falls back to
+        the smallest fitting own-lattice entry — so the jit cache can
+        never grow off-lattice variants and a legal plan always fits."""
+        if self.ecfg.attn_mode != "fused":
+            return self.t_max, self.ecfg.max_blocks_per_seq
+        need_t = plan.n_compute_tokens
+        tb = plan.t_bucket
+        if tb not in self._t_bucket_set or tb < need_t:
+            tb = next((b for b in self.token_buckets if b >= need_t),
+                      self.token_buckets[-1])
+        bs = self.ecfg.page_size
+        need_p = 1
+        for c in plan.prefills:
+            need_p = max(need_p, -(-(int(c.positions[-1]) + 1) // bs))
+        for req in plan.decodes:
+            ctx = req.prompt_len + len(req.generated)
+            need_p = max(need_p, -(-ctx // bs))
+        need_p = min(need_p, self.ecfg.max_blocks_per_seq)
+        nb = plan.np_bucket
+        if nb not in self._np_bucket_set or nb < need_p:
+            nb = next((b for b in self.np_buckets if b >= need_p),
+                      self.np_buckets[-1])
+        assert tb >= need_t, (tb, need_t)
+        return tb, nb
+
+    # ------------------------------------------------------------------
+    def _step_impl(self, params, k_pools, v_pools, inp,
+                   t_bucket: int, np_bucket: int, w_bucket: int):
         self.jit_traces += 1           # side effect at trace time only
         cfg, e = self.cfg, self.ecfg
         if e.assembly != "legacy":
-            inp = self._unpack(inp)    # trace-time slicing of the pack
+            # trace-time slicing of the pack into named views
+            inp = self._unpack(inp, t_bucket, np_bucket, w_bucket)
         R, QP, B = e.max_prefills, e.max_chunk, e.max_decodes
-        RQP = R * QP
+        fused = e.attn_mode == "fused"
 
         # in-step page maintenance: swap-ins land first (they commit pages
         # a COW fork in the same round may use as its donor), then copies;
@@ -189,8 +334,15 @@ class Engine:
         x = params["embed"][inp["tokens"]]          # (T, d)
         pos = inp["positions"]
 
-        qpos_pre = pos[:RQP].reshape(R, QP)
         impl = e.attn_impl
+        if fused:
+            worklist = None
+            if impl != "xla":
+                worklist = tuple(inp[f] for f in WL_FIELDS)
+            tq = min(e.q_tile, t_bucket)
+        else:
+            RQP = R * QP
+            qpos_pre = pos[:RQP].reshape(R, QP)
         for l in range(cfg.n_layers):
             blk = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
             window = self.windows[l]
@@ -207,16 +359,25 @@ class Engine:
             k_pools = k_pools.at[l].set(kp)
             v_pools = v_pools.at[l].set(vp)
 
-            qp_ = q[:RQP].reshape(R, QP, cfg.n_heads, cfg.head_dim)
-            op = msa_prefill(
-                qp_, kp, vp, inp["bt_pre"], inp["ctx_pre"], qpos_pre,
-                inp["qlens"], window=window, softcap=cfg.attn_logit_softcap,
-                q_tile=min(e.q_tile, QP), impl=impl)
-            od = msa_decode(
-                q[RQP:], kp, vp, inp["bt_dec"], inp["ctx_dec"],
-                window=window, softcap=cfg.attn_logit_softcap, impl=impl)
-            attn = jnp.concatenate(
-                [op.reshape(RQP, cfg.n_heads, cfg.head_dim), od], axis=0)
+            if fused:
+                # ONE varlen dispatch over the whole mixed stream
+                attn = msa_fused(
+                    q, kp, vp, inp["bt"], inp["ctx"], pos, inp["seq_ids"],
+                    inp["valid"], q_start=inp["qstart"], q_len=inp["qlen"],
+                    worklist=worklist, window=window,
+                    softcap=cfg.attn_logit_softcap, q_tile=tq, impl=impl)
+            else:
+                qp_ = q[:RQP].reshape(R, QP, cfg.n_heads, cfg.head_dim)
+                op = msa_prefill(
+                    qp_, kp, vp, inp["bt_pre"], inp["ctx_pre"], qpos_pre,
+                    inp["qlens"], window=window,
+                    softcap=cfg.attn_logit_softcap,
+                    q_tile=min(e.q_tile, QP), impl=impl)
+                od = msa_decode(
+                    q[RQP:], kp, vp, inp["bt_dec"], inp["ctx_dec"],
+                    window=window, softcap=cfg.attn_logit_softcap, impl=impl)
+                attn = jnp.concatenate(
+                    [op.reshape(RQP, cfg.n_heads, cfg.head_dim), od], axis=0)
             x = x + jnp.einsum("thk,hkd->td", attn, blk["wo"])
 
             h2 = rms_norm(x, blk["mlp_norm"], cfg.norm_eps)
@@ -241,49 +402,163 @@ class Engine:
         return token_ids, out_logits, k_pools, v_pools
 
     # ------------------------------------------------------------------
-    def build_inputs(self, plan: StepPlan) -> Dict[str, jax.Array]:
+    def build_inputs(self, plan: StepPlan):
         """Host-side assembly of the padded device arrays for one step.
 
-        The vectorized path assembles every int32 field directly into
-        named views of ONE flat host buffer and transfers it with a
-        single ``device_put`` (plus the two swap-payload buffers); the
-        per-field transfers of the legacy path cost more host time per
-        step than the arrays they move."""
+        Returns ``(inp, (t_bucket, np_bucket, w_bucket))`` — the static
+        bucket dims select the jit variant.  The vectorized path
+        assembles every int32 field directly into named views of ONE
+        flat host buffer and transfers it with a single ``device_put``
+        (plus the two swap-payload buffers); the per-field transfers of
+        the legacy path cost more host time per step than the arrays
+        they move."""
+        t_b, np_b = self.buckets_for(plan)
         if self.ecfg.assembly == "legacy":
             out = self._assemble_legacy(plan)
             out.update(self._fold_page_ops())
-            return {k: jnp.asarray(v) for k, v in out.items()}
-        buf = np.zeros((self._pack_size,), np.int32)
-        views = {name: buf[off:off + size]
-                 for name, off, size in self._pack_layout}
-        self._assemble_vectorized(plan, views)
+            return ({k: jnp.asarray(v) for k, v in out.items()},
+                    (t_b, np_b, 0))
+        fused = self.ecfg.attn_mode == "fused"
+        w_b = 0
+        fields = wl = None
+        if fused:
+            # one derivation of the varlen metadata feeds BOTH the packed
+            # buffer and (Pallas impls) the work-list builder
+            fields = self._assemble_fused(plan, t_b, np_b)
+            if self.ecfg.attn_impl != "xla":
+                tq = min(self.ecfg.q_tile, t_b)
+                wl, _ = build_worklist(
+                    fields["qstart"], fields["qlen"], fields["ctx"],
+                    fields["bt"], fields["positions"],
+                    page=self.ecfg.page_size, q_tile=tq,
+                    n_tiles=-(-t_b // tq), window=0)
+                # power-of-two W buckets keep the per-W jit variants at
+                # most log2(Wmax) many
+                w_b = max(WL_BUCKET,
+                          1 << (wl["wl_seq"].shape[0] - 1).bit_length())
+                wl = pad_worklist(wl, w_b, sentinel_seq=self.n_seqs)
+        layout, size = self.pack_layout(t_b, np_b, w_b)
+        buf = np.zeros((size,), np.int32)
+        views = {name: buf[off:off + size_] for name, off, size_ in layout}
+        if fused:
+            for name, arr in fields.items():
+                views[name][:] = arr.reshape(-1)
+            if wl is not None:
+                for f in WL_FIELDS:
+                    views[f][:] = wl[f]
+        else:
+            self._assemble_vectorized(plan, views)
         ops = self._fold_page_ops(views)
-        return {"pack": jnp.asarray(buf),
-                "swap_k": jnp.asarray(ops["swap_k"]),
-                "swap_v": jnp.asarray(ops["swap_v"])}
+        return ({"pack": jnp.asarray(buf),
+                 "swap_k": jnp.asarray(ops["swap_k"]),
+                 "swap_v": jnp.asarray(ops["swap_v"])},
+                (t_b, np_b, w_b))
 
-    def _unpack(self, inp: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    def _unpack(self, inp: Dict[str, jax.Array], t_bucket: int,
+                np_bucket: int, w_bucket: int) -> Dict[str, jax.Array]:
         """Static slices of the packed buffer back into named step inputs
         (trace-time only — compiles to views of the one transferred
         buffer)."""
         e = self.ecfg
-        R, B, NP = e.max_prefills, e.max_decodes, e.max_blocks_per_seq
+        layout, _ = self.pack_layout(t_bucket, np_bucket, w_bucket)
         buf = inp["pack"]
-        out = {name: buf[off:off + size]
-               for name, off, size in self._pack_layout}
+        out = {name: buf[off:off + size] for name, off, size in layout}
         out["valid"] = out["valid"].astype(bool)
-        out["bt_pre"] = out["bt_pre"].reshape(R, NP)
-        out["bt_dec"] = out["bt_dec"].reshape(B, NP)
+        if e.attn_mode == "fused":
+            out["bt"] = out["bt"].reshape(self.n_seqs, np_bucket)
+        else:
+            R, B, NP = e.max_prefills, e.max_decodes, e.max_blocks_per_seq
+            out["bt_pre"] = out["bt_pre"].reshape(R, NP)
+            out["bt_dec"] = out["bt_dec"].reshape(B, NP)
         out["swap_k"] = inp["swap_k"]
         out["swap_v"] = inp["swap_v"]
         return out
 
+    # ------------------------------------------------------------------
+    def _assemble_fused(self, plan: StepPlan, t_bucket: int,
+                        np_bucket: int) -> Dict[str, np.ndarray]:
+        """Varlen assembly: prefill chunks pack densely at the head of
+        the flattened stream (no per-request QP padding), decode rows
+        follow as runs of length 1.  Sequence rows 0..R-1 are prefills,
+        R..R+B-1 decodes; only bucket slack at the tail is padding.
+
+        Returns the named field arrays (the single source of truth for
+        the packed buffer AND the Pallas work-list builder — the two
+        consumers must never derive this metadata independently)."""
+        e = self.ecfg
+        bs = e.page_size
+        R, B = e.max_prefills, e.max_decodes
+        t = t_bucket
+        tokens = np.zeros((t,), np.int32)
+        positions = np.zeros((t,), np.int32)
+        valid = np.zeros((t,), np.int32)
+        write_slot = np.zeros((t,), np.int32)
+        write_off = np.zeros((t,), np.int32)
+        seq_ids = np.zeros((t,), np.int32)
+        sel = np.zeros((R + B,), np.int32)
+        qstart = np.zeros((self.n_seqs,), np.int32)
+        qlen = np.zeros((self.n_seqs,), np.int32)
+        ctx = np.zeros((self.n_seqs,), np.int32)
+        bt = np.zeros((self.n_seqs, np_bucket), np.int32)
+
+        assert len(plan.prefills) <= R and len(plan.decodes) <= B
+        off = 0
+        for r, chunk in enumerate(plan.prefills):
+            req = chunk.req
+            pos = np.asarray(chunk.positions, np.int32)
+            n = pos.shape[0]
+            slots = req.slot_array()
+            tokens[off:off + n] = req.token_array()[pos]
+            positions[off:off + n] = pos
+            valid[off:off + n] = True
+            write_slot[off:off + n] = slots[pos // bs]
+            write_off[off:off + n] = pos % bs
+            seq_ids[off:off + n] = r
+            qstart[r] = off
+            qlen[r] = n
+            ctx[r] = pos[-1] + 1
+            k = min(np_bucket, slots.shape[0])
+            bt[r, :k] = slots[:k]
+            sel[r] = off + n - 1
+            off += n
+
+        nd = len(plan.decodes)
+        if nd:
+            p = np.fromiter(
+                (req.prompt_len + len(req.generated) - 1
+                 for req in plan.decodes), np.int32, nd)
+            tokens[off:off + nd] = np.fromiter(
+                (req.generated[-1] for req in plan.decodes), np.int32, nd)
+            positions[off:off + nd] = p
+            valid[off:off + nd] = True
+            write_slot[off:off + nd] = np.fromiter(
+                (req.slot_array()[pi // bs]
+                 for req, pi in zip(plan.decodes, p)), np.int32, nd)
+            write_off[off:off + nd] = p % bs
+            rows = off + np.arange(nd, dtype=np.int32)
+            seq_ids[off:off + nd] = R + np.arange(nd, dtype=np.int32)
+            qstart[R:R + nd] = rows
+            qlen[R:R + nd] = 1
+            ctx[R:R + nd] = p + 1
+            for i, req in enumerate(plan.decodes):
+                slots = req.slot_array()
+                k = min(np_bucket, slots.shape[0])
+                bt[R + i, :k] = slots[:k]
+            sel[R:R + nd] = rows
+            off += nd
+        assert off <= t_bucket, (off, t_bucket)
+        return dict(tokens=tokens, positions=positions, valid=valid,
+                    write_slot=write_slot, write_off=write_off,
+                    seq_ids=seq_ids, sel=sel, qstart=qstart, qlen=qlen,
+                    ctx=ctx, bt=bt)
+
     def _assemble_vectorized(self, plan: StepPlan,
                              v: Dict[str, np.ndarray]) -> None:
-        """Vectorized assembly: numpy scatter/gather over per-request
-        arrays cached on ``Request`` (``token_array`` / ``slot_array``)
-        into the packed-buffer views ``v``; Python loops run only over
-        requests (≤ R prefills + B decodes), never over tokens."""
+        """Vectorized assembly of the split (two-dispatch) layout: numpy
+        scatter/gather over per-request arrays cached on ``Request``
+        (``token_array`` / ``slot_array``) into the packed-buffer views
+        ``v``; Python loops run only over requests (≤ R prefills + B
+        decodes), never over tokens."""
         e = self.ecfg
         bs = e.page_size
         R, QP, B, NP = e.max_prefills, e.max_chunk, e.max_decodes, \
@@ -341,7 +616,8 @@ class Engine:
             sel[R:R + nd] = R * QP + np.arange(nd, dtype=np.int32)
 
     def _assemble_legacy(self, plan: StepPlan) -> Dict[str, np.ndarray]:
-        """Original per-token Python-loop assembly (reference / baseline)."""
+        """Original per-token Python-loop assembly (reference / baseline;
+        split attention layout only)."""
         e = self.ecfg
         bs = e.page_size
         R, QP, B, NP = e.max_prefills, e.max_chunk, e.max_decodes, \
@@ -516,6 +792,22 @@ class Engine:
         self.v_pools = self.v_pools.at[:, slot].set(jnp.asarray(v))
 
     # ------------------------------------------------------------------
+    def perf_counters(self) -> Dict[str, object]:
+        """Deterministic hot-path accounting (gated in
+        benchmarks/kernel_fusion.py — host wall-clock alone is too noisy
+        on shared containers to measure the fused-dispatch win)."""
+        steps = max(self.steps_executed, 1)
+        total = max(self.total_token_rows, 1)
+        return {
+            "attn_dispatches": self.attn_dispatches,
+            "attn_dispatches_per_step": self.attn_dispatches / steps,
+            "padded_token_fraction":
+                1.0 - self.valid_token_rows / total,
+            "bucket_counts": {f"T{t}xNP{n}": c for (t, n), c
+                              in sorted(self.bucket_counts.items())},
+        }
+
+    # ------------------------------------------------------------------
     def dispatch(self, plan: StepPlan) -> StepHandle:
         """Assemble and launch one step WITHOUT waiting for the device.
 
@@ -524,11 +816,18 @@ class Engine:
         subsequent ``dispatch`` is ordered after this step by data
         dependency — the basis of the one-step-deep pipeline."""
         t0 = time.perf_counter()
-        inp = self.build_inputs(plan)
+        inp, (t_b, np_b, w_b) = self.build_inputs(plan)
         t_asm = time.perf_counter() - t0
         token_ids, pre_logits, self.k_pools, self.v_pools = self._step(
-            self.params, self.k_pools, self.v_pools, inp)
+            self.params, self.k_pools, self.v_pools, inp, t_b, np_b, w_b)
         self.steps_executed += 1
+        self.buckets_used.add((t_b, np_b, w_b))
+        fused = self.ecfg.attn_mode == "fused"
+        self.attn_dispatches += self.cfg.n_layers * (1 if fused else 2)
+        self.valid_token_rows += plan.n_compute_tokens
+        self.total_token_rows += t_b if fused else self.t_max
+        key = (t_b, np_b)
+        self.bucket_counts[key] = self.bucket_counts.get(key, 0) + 1
         return StepHandle(token_ids=token_ids, prefill_logits=pre_logits,
                           assembly_time=t_asm,
                           full_logits=self.ecfg.return_full_logits)

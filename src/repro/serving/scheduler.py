@@ -35,6 +35,11 @@ class PrefillChunk:
 class StepPlan:
     prefills: List[PrefillChunk] = field(default_factory=list)
     decodes: List[Request] = field(default_factory=list)
+    # occupancy buckets chosen for this step (fused engine layout): the
+    # smallest lattice entries that fit the step's compute tokens and
+    # deepest page table.  None = engine picks (identical lattice).
+    t_bucket: Optional[int] = None
+    np_bucket: Optional[int] = None
 
     @property
     def n_compute_tokens(self) -> int:
@@ -55,6 +60,12 @@ class SchedulerConfig:
     decode_threshold: int = 8        # shrink chunks beyond this many decodes
     adaptive_chunking: bool = True
     max_running: int = 64
+    # occupancy bucket lattices (wired from the engine by the server so
+    # both sides agree; empty = scheduler leaves the choice to the
+    # engine).  The §5.1 chunk decision above determines a step's token
+    # count, so the scheduler is the natural place to pick its bucket.
+    token_buckets: Tuple[int, ...] = ()
+    page_buckets: Tuple[int, ...] = ()
 
 
 class ChunkingScheduler:
@@ -213,7 +224,29 @@ class ChunkingScheduler:
             plan.prefills.append(PrefillChunk(
                 req=req, positions=want,
                 completes_prefill=req.prefill_done))
+
+        self._select_buckets(plan)
         return plan
+
+    def _select_buckets(self, plan: StepPlan) -> None:
+        """Occupancy bucket selection (fused engine layout): smallest
+        lattice entries covering this step's compute tokens (a direct
+        function of the §5.1 chunk decision) and its deepest page table."""
+        c = self.cfg
+        if c.token_buckets and not plan.empty():
+            need = plan.n_compute_tokens
+            plan.t_bucket = next((b for b in c.token_buckets if b >= need),
+                                 c.token_buckets[-1])
+        if c.page_buckets and not plan.empty():
+            bs = c.block_size
+            need = 1
+            for ch in plan.prefills:
+                need = max(need, -(-(int(ch.positions[-1]) + 1) // bs))
+            for req in plan.decodes:
+                ctx = req.prompt_len + len(req.generated)
+                need = max(need, -(-ctx // bs))
+            plan.np_bucket = next((b for b in c.page_buckets if b >= need),
+                                  c.page_buckets[-1])
 
     # ------------------------------------------------------------------
     def finish(self, req: Request, now: float) -> None:

@@ -62,6 +62,9 @@ class _SimEngine:
     def queue_copies(self, pairs) -> None:
         pass
 
+    def perf_counters(self) -> Dict:
+        return {}
+
     def dispatch(self, plan: StepPlan) -> StepHandle:
         self.steps_executed += 1
         return StepHandle(token_ids=self._ids, prefill_logits=self._logits)
@@ -98,6 +101,11 @@ class ServerConfig:
     # and losslessness tests); 1 = schedule/assemble step N+1 while step N
     # executes (one-step-deep, the paper's §5.3 overlap assumption).
     pipeline_depth: int = 1
+    # attention layout of the default-constructed engine: "fused" = one
+    # varlen dispatch per layer with occupancy-bucketed compile shapes,
+    # "split" = the original padded prefill + decode two-dispatch layout
+    # (the baseline benchmarks/kernel_fusion.py compares against).
+    attn_mode: str = "fused"
     scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
     use_hit_count: bool = True
 
@@ -128,8 +136,13 @@ class AsymCacheServer:
                 num_pages=scfg.num_blocks, page_size=scfg.block_size,
                 max_chunk=scfg.scheduler.max_chunk,
                 max_prefills=scfg.scheduler.max_prefills,
-                max_decodes=scfg.scheduler.max_decodes)
+                max_decodes=scfg.scheduler.max_decodes,
+                attn_mode=scfg.attn_mode)
             self.engine = Engine(cfg, ecfg, params)
+            # the scheduler picks each step's occupancy bucket from its
+            # §5.1 chunk decision — both sides must share one lattice
+            self.sched.cfg.token_buckets = self.engine.token_buckets
+            self.sched.cfg.page_buckets = self.engine.np_buckets
             if scfg.host_blocks > 0:
                 self.bm.swap_out_fn = lambda slot: self.engine.swap_out(slot)
                 self.bm.swap_in_fn = lambda slot, pl: \
@@ -294,6 +307,9 @@ class AsymCacheServer:
             "prefix_matches": self.bm.n_prefix_matches,
             "sim_time": self.now,
         })
+        # deterministic hot-path accounting (fused-dispatch + occupancy
+        # buckets; empty for the simulated engine)
+        out.update(self.engine.perf_counters())
         return out
 
     # ------------------------------------------------------------------

@@ -28,15 +28,16 @@ def small_model():
 
 
 def _mk_server(cfg, params, depth, assembly="vectorized", num_blocks=64,
-               host_blocks=0, **ecfg_kw):
+               host_blocks=0, attn_mode="fused", **ecfg_kw):
     scfg = ServerConfig(
         policy="asymcache", num_blocks=num_blocks, block_size=16,
         clock="model", pipeline_depth=depth, host_blocks=host_blocks,
+        attn_mode=attn_mode,
         scheduler=SchedulerConfig(token_budget=128, max_chunk=64,
                                   max_prefills=2, max_decodes=8))
     ecfg = EngineConfig(num_pages=num_blocks, page_size=16, max_prefills=2,
                         max_chunk=64, max_decodes=8, assembly=assembly,
-                        **ecfg_kw)
+                        attn_mode=attn_mode, **ecfg_kw)
     return AsymCacheServer(cfg, params, scfg, ecfg=ecfg)
 
 
@@ -48,17 +49,30 @@ def _wl(n_sessions=3, seed=0, **kw):
 
 
 def test_step_compiles_exactly_once(small_model):
-    """The static-bucket invariant the pipeline depends on: one trace of
-    the jitted step across a multi-step run mixing prefill chunks (several
-    per prefill: prompts > max_chunk) and decodes."""
+    """The static-bucket invariant the pipeline depends on: in the split
+    layout the jitted step traces exactly once across a multi-step run
+    mixing prefill chunks (several per prefill: prompts > max_chunk) and
+    decodes; in the fused layout it traces exactly once PER occupancy
+    bucket used (the compile-once-per-bucket cache)."""
     cfg, params = small_model
-    srv = _mk_server(cfg, params, depth=1)
+    srv = _mk_server(cfg, params, depth=1, attn_mode="split")
     wl = _wl(n_sessions=3, first_ctx_len=(100, 180))
     res = srv.run(wl)
     assert res["steps"] > 10
     assert srv.engine.steps_executed == res["steps"]
     assert srv.engine.jit_traces == 1, (
         f"jitted step retraced {srv.engine.jit_traces} times")
+
+    srv_f = _mk_server(cfg, params, depth=1)          # fused default
+    srv_f.run(_wl(n_sessions=3, first_ctx_len=(100, 180)))
+    used = len(srv_f.engine.buckets_used)
+    assert 1 <= used <= (len(srv_f.engine.token_buckets)
+                         * len(srv_f.engine.np_buckets))
+    assert srv_f.engine.jit_traces == used, (
+        srv_f.engine.jit_traces, sorted(srv_f.engine.buckets_used))
+    # a second identical run re-uses every per-bucket compilation
+    srv_f.run(_wl(n_sessions=3, first_ctx_len=(100, 180)))
+    assert srv_f.engine.jit_traces == used
 
 
 def test_pipelined_matches_synchronous(small_model):
@@ -77,12 +91,14 @@ def test_pipelined_matches_synchronous(small_model):
 
 
 def test_legacy_and_vectorized_assembly_agree(small_model):
-    """The vectorized numpy assembly must reproduce the legacy per-token
-    reference bit-for-bit (the packed buffer unpacks to the same fields)."""
+    """The fused vectorized path must reproduce the legacy per-token /
+    two-dispatch reference bit-for-bit — this crosses BOTH the assembly
+    rewrite and the fused-vs-split attention layouts."""
     cfg, params = small_model
     srv_v = _mk_server(cfg, params, depth=1, assembly="vectorized")
     srv_l = _mk_server(cfg, params, depth=0, assembly="legacy",
-                       return_full_logits=True, max_instep_copies=0)
+                       attn_mode="split", return_full_logits=True,
+                       max_instep_copies=0)
     wl_v, wl_l = _wl(seed=7), _wl(seed=7)
     rv, rl = srv_v.run(wl_v), srv_l.run(wl_l)
     assert rv["steps"] == rl["steps"]
@@ -93,20 +109,21 @@ def test_legacy_and_vectorized_assembly_agree(small_model):
 
 
 def test_assembly_paths_build_identical_inputs(small_model):
-    """Field-level check: one engine, one plan, both assembly paths."""
+    """Field-level check: one (split-layout) engine, one plan, both
+    assembly paths fill the same packed fields."""
     cfg, params = small_model
-    from repro.serving.engine import Engine
-    srv = _mk_server(cfg, params, depth=1)
+    srv = _mk_server(cfg, params, depth=1, attn_mode="split")
     wl = _wl(n_sessions=2, seed=1)
     for r in wl:
         srv._on_arrival(r)
     plan = srv.sched.schedule(now=1e9)
     assert plan.prefills
     eng = srv.engine
-    packed = eng.build_inputs(plan)
+    packed, (t_b, np_b, w_b) = eng.build_inputs(plan)
     legacy = eng._assemble_legacy(plan)
     buf = np.asarray(packed["pack"])
-    for name, off, size in eng._pack_layout:
+    layout, _ = eng.pack_layout(t_b, np_b, w_b)
+    for name, off, size in layout:
         if name not in legacy:          # page-op fields have no legacy twin
             continue
         got = buf[off:off + size]
