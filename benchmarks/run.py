@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   (ours)      prefix_sharing     cross-request sharing vs no-sharing
   (ours)      pipeline           overlapped pipeline vs synchronous loop
   Fig. 13     kernel_fusion      fused varlen dispatch vs two-dispatch
+  (ours)      sharded_serving    N-way sequence-sharded engine vs single
 """
 import argparse
 import sys
@@ -32,6 +33,9 @@ MODULES = [
     ("prefix_sharing", {}),
     ("pipeline", {}),
     ("kernel_fusion", {}),
+    # runs its measurement in a child process with 4 forced host devices,
+    # so it is insensitive to this process's jax device-count lock
+    ("sharded_serving", {}),
 ]
 
 

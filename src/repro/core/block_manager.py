@@ -102,9 +102,21 @@ class BlockManager:
                  freq: FreqParams, count_gamma: Optional[float] = None,
                  host_blocks: int = 0,
                  swap_out_fn=None, swap_in_fn=None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 n_shards: int = 1):
         self.num_blocks = num_blocks
         self.block_size = block_size
+        # ---- KV sharding (sharded serving engine): the device page pool
+        # is split into n contiguous runs of num_blocks/n pages, one per
+        # device.  Slot -> shard is a pure function (slot // shard_size,
+        # matching how GSPMD shards the pool's page axis); the manager's
+        # job is to keep allocation striped so every sequence's context
+        # spreads across shards (that is what makes each shard's pages a
+        # "segment subset" the flash-decode LSE merge can combine).
+        assert n_shards >= 1 and num_blocks % n_shards == 0, \
+            (num_blocks, n_shards)
+        self.n_shards = n_shards
+        self.shard_size = num_blocks // n_shards
         self.policy = policy
         self.cost_model = cost_model
         self.freq = freq
@@ -271,15 +283,59 @@ class BlockManager:
     def num_free(self) -> int:
         return len(self.free) + len(self.policy)
 
+    # ------------------------------------------------------------------
+    # shard accounting (sharded serving engine)
+    # ------------------------------------------------------------------
+    def shard_of(self, slot: int) -> int:
+        """Device shard owning pool page ``slot`` (contiguous runs)."""
+        return slot // self.shard_size
+
+    def per_shard_used(self) -> List[int]:
+        """Resident (non-free-list) pages per shard.  Evictable-but-
+        resident blocks count as used: they hold live KV content."""
+        used = [self.shard_size] * self.n_shards
+        for slot in self.free:
+            used[self.shard_of(slot)] -= 1
+        return used
+
+    def _pop_striped_batch(self, n: int) -> List[int]:
+        """Pop up to ``n`` free slots balancing shard occupancy: each pick
+        prefers the most-free shard, round-robin on ties, so the blocks
+        of one allocation stripe across shards.  ONE partition of the
+        free list per call (O(num_free + n·n_shards)), not per block —
+        ``self.free`` stays the single source of truth between calls."""
+        free_by: List[List[int]] = [[] for _ in range(self.n_shards)]
+        for slot in self.free:
+            free_by[self.shard_of(slot)].append(slot)
+        out: List[int] = []
+        last = -1
+        while len(out) < n:
+            best, best_key = -1, None
+            for d in range(1, self.n_shards + 1):
+                s = (last + d) % self.n_shards
+                if free_by[s] and (best_key is None
+                                   or len(free_by[s]) > best_key):
+                    best, best_key = s, len(free_by[s])
+            if best < 0:
+                break
+            out.append(free_by[best].pop())
+            last = best
+        self.free = [s for lst in free_by for s in lst]
+        return out
+
     def allocate(self, n: int, now: float) -> Optional[List[int]]:
         """Allocate ``n`` fresh blocks, evicting if necessary.
 
         Returns None (allocating nothing) if the pool can't satisfy it —
-        the scheduler must defer the request."""
+        the scheduler must defer the request.  With ``n_shards > 1`` free
+        slots are taken striped across shards (most-free first, round-
+        robin on ties) so sequences sequence-shard across devices."""
         if self.num_free() < n:
             return None
         out: List[int] = []
-        for _ in range(n):
+        if self.n_shards > 1:
+            out = self._pop_striped_batch(n)
+        for _ in range(n - len(out)):
             if self.free:
                 slot = self.free.pop()
             else:
@@ -287,6 +343,8 @@ class BlockManager:
                 assert slot is not None
                 self._erase(slot)
                 self.n_evictions += 1
+            out.append(slot)
+        for slot in out:
             blk = self.blocks[slot]
             blk.key = None
             blk.ref_count = 1
@@ -294,7 +352,6 @@ class BlockManager:
             blk.count = 1.0
             blk.boost = 1.0
             blk.last_access = now
-            out.append(slot)
         return out
 
     def _erase(self, slot: int) -> None:
@@ -368,13 +425,21 @@ class BlockManager:
     def swap_in(self, key: int, slot: int, block_pos: int,
                 now: float) -> bool:
         """Restore a host-tier block into device slot ``slot`` (paper §7).
-        Returns True when the payload was copied (engine attached)."""
-        payload, _pos = self.host_tier.pop(key)
+
+        Returns False when the key is gone — ``match()`` records host hits
+        BEFORE ``allocate()`` runs, and the evictions allocate triggers
+        spill fresh blocks into the host tier, whose LRU may push the
+        matched key out in between.  The caller must then leave the block
+        as a gap (recomputed losslessly) instead of marking it hit."""
+        item = self.host_tier.pop(key, None)
+        if item is None:
+            return False
+        payload, _pos = item
         if self.swap_in_fn is not None and payload is not None:
             self.swap_in_fn(slot, payload)
         self.commit(slot, key, block_pos)
         self.n_swap_ins += 1
-        return payload is not None
+        return True
 
     def earliest_pin_expiry(self, now: float) -> Optional[float]:
         times = [b.pinned_until for b in self.blocks

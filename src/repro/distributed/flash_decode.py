@@ -24,8 +24,23 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed import context as ctx
+from repro.distributed.context import shard_map
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def lse_merge(o: jax.Array, lse: jax.Array, axes) -> jax.Array:
+    """Numerically exact cross-shard softmax merge (paper's MSA combine).
+
+    ``o`` is the locally-normalized attention output (numerator / local
+    softmax mass), ``lse`` the local log-sum-exp.  Must run inside
+    ``shard_map``/``pmap`` over ``axes``.  Rows whose every shard is fully
+    masked (``lse == NEG_INF`` everywhere) merge to exact zeros."""
+    m = jax.lax.pmax(lse, axes)
+    w = jnp.exp(lse - m)                       # NEG_INF-lse rows -> 0
+    o_sum = jax.lax.psum(o * w[..., None], axes)
+    w_sum = jax.lax.psum(w, axes)
+    return o_sum / jnp.maximum(w_sum, 1e-30)[..., None]
 
 
 def _local_partial(q, k, v, start, kv_len, window, softcap):
@@ -99,14 +114,97 @@ def sharded_decode_attention(q: jax.Array, k_cache: jax.Array,
         idx = 0 if replicated else jax.lax.axis_index(seq_tuple)
         start = idx * s_loc
         o, lse = _local_partial(ql, kl, vl, start, lenl, window, softcap)
-        m = jax.lax.pmax(lse, seq_tuple)
-        w = jnp.exp(lse - m)
-        o_sum = jax.lax.psum(o * w[..., None], seq_tuple)
-        w_sum = jax.lax.psum(w, seq_tuple)
-        return (o_sum / jnp.maximum(w_sum, 1e-30)[..., None]).astype(q.dtype)
+        return lse_merge(o, lse, seq_tuple).astype(q.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=mesh,
         in_specs=(q_spec, kv_spec, kv_spec, len_spec),
-        out_specs=q_spec,
+        out_specs=q_spec, check_rep=False,
     )(q, k_cache, v_cache, kv_len)
+
+
+# ---------------------------------------------------------------------------
+# Sharded *paged* attention (serving engine)
+#
+# The paged generalization of the flash-decode merge above: the KV page
+# pool (P pages) is sharded over the mesh's ``model`` axis into contiguous
+# runs of P/n pages per device, and a sequence's pages are striped across
+# shards by the block manager — so each device holds ~1/n of every
+# sequence's context.  A device's local pages are one "segment subset";
+# per-shard partials (o_i, lse_i) from ``msa_fused_partial_ref`` merge
+# exactly through :func:`lse_merge`.  Collectives per layer: pmax + 2-term
+# psum over ``model`` (tiny: (T, H, D) + (T, H)), same shape family as the
+# dense flash-decode path.
+# ---------------------------------------------------------------------------
+
+
+def sharded_msa_fused(q, k_pool, v_pool, k_new, v_new, write_slot,
+                      write_off, valid, bt, context_lens, q_pos, seq_ids,
+                      *, mesh, axis: str = "model", window: int = 0,
+                      softcap: float = 0.0):
+    """One layer's KV page write + fused varlen MSA over a page-sharded
+    pool, inside ``shard_map``.  Returns ``(k_pool', v_pool', attn)``.
+
+    ``k_pool``/``v_pool`` are the layer's (P, page, KH, D) pools sharded on
+    the page axis over ``axis``; everything else is replicated.  Each shard
+    (a) scatters the new tokens whose destination page it owns (non-local
+    rows steered out of range and dropped — the same mechanism that drops
+    padding rows on one device), then (b) computes the attention partial
+    over its local pages only (``page_valid`` masks block-table entries
+    owned by other shards), and (c) merges via the exact LSE combine."""
+    from repro.kernels.msa.ops import msa_fused_partial, write_kv_pages
+
+    n = mesh.shape[axis]
+    p_total = k_pool.shape[0]
+    assert p_total % n == 0, (p_total, n)
+    p_loc = p_total // n
+    pool_spec = P(axis, None, None, None)
+
+    def local_fn(ql, kp, vp, kn, vn, ws, wo, va, bt_, ctx_, pos_, sid):
+        i = jax.lax.axis_index(axis)
+        lo = i * p_loc
+        ls = ws - lo
+        local_ok = va & (ls >= 0) & (ls < p_loc)
+        kp, vp = write_kv_pages(kp, vp, kn, vn,
+                                jnp.where(local_ok, ls, p_loc), wo, local_ok)
+        page_valid = (bt_ >= lo) & (bt_ < lo + p_loc)
+        o, lse = msa_fused_partial(
+            ql, kp, vp, jnp.where(page_valid, bt_ - lo, 0), ctx_, pos_, sid,
+            va, page_valid, window=window, softcap=softcap)
+        return kp, vp, lse_merge(o, lse, axis).astype(ql.dtype)
+
+    return shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(), pool_spec, pool_spec, P(), P(), P(), P(), P(), P(),
+                  P(), P(), P()),
+        out_specs=(pool_spec, pool_spec, P()), check_rep=False,
+    )(q, k_pool, v_pool, k_new, v_new, write_slot, write_off, valid, bt,
+      context_lens, q_pos, seq_ids)
+
+
+def sharded_pool_ops(k_pools, v_pools, swap_dst, swap_k, swap_v,
+                     copy_src, copy_dst, *, mesh, axis: str = "model"):
+    """Per-shard in-step page maintenance on the full (L, P, ...) pools.
+
+    ``swap_dst``/``copy_src``/``copy_dst`` are (n, S) / (n, C) int32 in
+    shard-LOCAL page indices (row i = shard i's queue; padding: swap dst
+    == P_loc, copies repeat the last real local pair or the identity
+    0 -> 0).  ``swap_k``/``swap_v`` are (n, L, S, page, KH, D) payloads
+    sharded on the leading shard axis.  Cross-shard copies cannot be
+    expressed here — the engine routes them through its eager fallback."""
+    from repro.kernels.msa.ops import apply_page_copies, apply_swap_ins
+
+    pool_spec = P(None, axis, None, None, None)
+    swap_spec = P(axis, None, None, None, None, None)
+
+    def local_fn(k, v, sd, sk, sv, cs, cd):
+        i = jax.lax.axis_index(axis)
+        k, v = apply_swap_ins(k, v, sd[i], sk[0], sv[0])
+        k, v = apply_page_copies(k, v, cs[i], cd[i])
+        return k, v
+
+    return shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(pool_spec, pool_spec, P(), swap_spec, swap_spec, P(), P()),
+        out_specs=(pool_spec, pool_spec), check_rep=False,
+    )(k_pools, v_pools, swap_dst, swap_k, swap_v, copy_src, copy_dst)

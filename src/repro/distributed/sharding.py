@@ -181,6 +181,30 @@ def param_shardings(cfg: ModelConfig, mesh: Mesh, rules: Dict) -> Any:
         axes_tree, is_leaf=lambda x: isinstance(x, tuple))
 
 
+#: logical axes that shard *parameters* (as opposed to activations /
+#: decode state); decode and prefill rules must agree on all of them for
+#: one sharded param set to serve the engine's mixed prefill+decode step
+WEIGHT_AXES = ("heads", "kv_heads", "ffn", "vocab", "experts",
+               "expert_ffn", "expert_fsdp", "fsdp", "ssm_inner",
+               "ssm_heads")
+
+
+def serving_param_shardings(cfg: ModelConfig, mesh: Mesh):
+    """(rules, param shardings) for the sharded serving engine.
+
+    The engine executes prefill chunks and decode rows in ONE mixed step,
+    so its weights must satisfy both kinds' sharding rules at once.  The
+    rules differ only in batch/kv_seq placement and flags — asserted here
+    per weight axis rather than assumed."""
+    rd = sharding_rules(cfg, mesh, "decode")
+    rp = sharding_rules(cfg, mesh, "prefill")
+    for a in WEIGHT_AXES:
+        assert rd.get(a) == rp.get(a), \
+            f"decode/prefill weight rules diverge on {a!r}: " \
+            f"{rd.get(a)!r} vs {rp.get(a)!r}"
+    return rd, param_shardings(cfg, mesh, rd)
+
+
 def opt_shardings(opt_name: str, cfg: ModelConfig, mesh: Mesh,
                   rules: Dict) -> Any:
     """Optimizer state shardings mirror the parameter axes.

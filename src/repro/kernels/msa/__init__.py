@@ -4,10 +4,11 @@ from repro.kernels.msa.ops import (
     apply_swap_ins,
     msa_decode,
     msa_fused,
+    msa_fused_partial,
     msa_prefill,
     write_kv_pages,
 )
 
 __all__ = ["apply_page_copies", "apply_swap_ins", "build_worklist",
-           "msa_decode", "msa_fused", "msa_prefill", "pad_worklist",
-           "write_kv_pages", "WL_FIELDS"]
+           "msa_decode", "msa_fused", "msa_fused_partial", "msa_prefill",
+           "pad_worklist", "write_kv_pages", "WL_FIELDS"]

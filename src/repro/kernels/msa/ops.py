@@ -66,6 +66,26 @@ def msa_fused(q, k_pages, v_pages, block_tables, context_lens, q_pos,
                             interpret=interpret)
 
 
+def msa_fused_partial(q, k_pages, v_pages, block_tables, context_lens,
+                      q_pos, seq_ids, q_valid, page_valid, *,
+                      window: int = 0, softcap: float = 0.0,
+                      impl: str = DEFAULT_IMPL):
+    """Per-shard partial of the fused varlen dispatch: attention restricted
+    to the pages marked valid, in the normalized ``(o, lse)`` form the
+    cross-shard log-sum-exp merge consumes (``repro.distributed.
+    flash_decode``).  Each shard's local page pool is one segment subset
+    of the multi-segment context."""
+    if impl != "xla":
+        # partial+merge is the CPU/host-device validation path; a fused
+        # Pallas partial (TPU pools sharded across chips) would reuse the
+        # same work-list machinery with an lse output — future work
+        raise NotImplementedError("msa_fused_partial: xla impl only")
+    return ref.msa_fused_partial_ref(q, k_pages, v_pages, block_tables,
+                                     context_lens, q_pos, seq_ids, q_valid,
+                                     page_valid, window=window,
+                                     softcap=softcap)
+
+
 def msa_decode(q, k_pages, v_pages, block_tables, context_lens, *,
                window: int = 0, softcap: float = 0.0,
                impl: str = DEFAULT_IMPL) -> jax.Array:

@@ -117,6 +117,78 @@ def msa_fused_ref(
     return out[:, 0]
 
 
+def msa_fused_partial_ref(
+    q: jax.Array,              # (T, H, D) flattened mixed token stream
+    k_pages: jax.Array,        # (P_loc, page, KH, D) — a LOCAL pool shard
+    v_pages: jax.Array,
+    block_tables: jax.Array,   # (N, NP) int32 — LOCAL page ids
+    context_lens: jax.Array,   # (N,) int32
+    q_pos: jax.Array,          # (T,) int32
+    seq_ids: jax.Array,        # (T,) int32
+    q_valid: jax.Array,        # (T,) bool
+    page_valid: jax.Array,     # (N, NP) bool — False = page lives elsewhere
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+):
+    """Partial varlen MSA over a *subset* of a context's pages, in the
+    normalized ``(o, lse)`` form of the multi-segment/flash-decode merge:
+
+        o   = softmax-weighted V restricted to the valid pages
+        lse = log-sum-exp of the restricted scores
+
+    This is the per-shard term of the distributed generalization of MSA:
+    each device's local page pool is one "segment subset"; partials merge
+    exactly via ``pmax``/``psum`` over the kv-sharding axis (see
+    ``repro.distributed.flash_decode``).  With ``page_valid`` all-True and
+    one shard, ``exp(lse)``-weighting recovers :func:`msa_fused_ref` up to
+    f32 summation order.
+
+    Tokens with no valid page in context (all their KV lives on other
+    shards) return ``lse = NEG_INF`` and ``o = 0`` — a zero-weight term in
+    the merge.  Returns ``(o (T, H, D) f32, lse (T, H) f32)``."""
+    t, h, d = q.shape
+    kh = k_pages.shape[2]
+    page = k_pages.shape[1]
+    n_rep = h // kh
+    scale = 1.0 / math.sqrt(d)
+
+    bt = block_tables[seq_ids]                      # (T, NP)
+    k = _gather_kv(k_pages, bt)                     # (T, S, KH, D)
+    v = _gather_kv(v_pages, bt)
+    s_len = k.shape[1]
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = (q.astype(jnp.float32) * scale).reshape(t, 1, kh, n_rep, d)
+    scores = jnp.einsum("tqhgd,tshd->thgqs", qf, kf)[:, :, :, 0, :]
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)  # (T, KH, G, S)
+
+    ctx = context_lens[seq_ids]                     # (T,)
+    kv_pos = jnp.arange(s_len, dtype=jnp.int32)
+    mask = kv_pos[None, :] < ctx[:, None]
+    rel = q_pos[:, None] - kv_pos[None, :]
+    mask = mask & (rel >= 0)
+    if window > 0:
+        mask = mask & (rel < window)
+    pv = page_valid[seq_ids]                        # (T, NP)
+    mask = mask & jnp.repeat(pv, page, axis=1)
+    mask = (mask & q_valid[:, None])[:, None, None, :]   # (T, 1, 1, S)
+
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)                    # (T, KH, G)
+    p = jnp.exp(scores - m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("thgs,tshd->thgd", p, vf)
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    # fully-masked rows: l == 0 -> o already 0; pin lse to NEG_INF so the
+    # cross-shard merge gives them zero weight
+    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), NEG_INF)
+    return o.reshape(t, h, d), lse.reshape(t, h)
+
+
 def msa_decode_ref(
     q: jax.Array,              # (B, H, D)
     k_pages: jax.Array,        # (P, page, KH, D)

@@ -1,25 +1,81 @@
-"""Production mesh construction.
+"""Production mesh construction + JAX version-compat shims.
 
-A FUNCTION (not a module-level constant) so importing this module never
-touches jax device state — critical because smoke tests must see 1 CPU
-device while the dry-run forces 512 host devices via XLA_FLAGS before
-any jax import.
+Mesh builders are FUNCTIONS (not module-level constants) so importing this
+module never touches jax device state — critical because smoke tests must
+see 1 CPU device while the dry-run forces 512 host devices via XLA_FLAGS
+before any jax import.
+
+Version compat: newer JAX exposes ``jax.sharding.AxisType`` and accepts an
+``axis_types`` kwarg on ``jax.make_mesh`` / ``AbstractMesh(shape, names)``;
+the pinned 0.4.x toolchain has neither (and its ``AbstractMesh`` takes a
+``((name, size), ...)`` tuple).  ``make_mesh`` / ``abstract_mesh`` below
+paper over both so callers never import ``AxisType`` directly.
 """
 from __future__ import annotations
 
+import inspect
+from typing import Optional, Sequence, Tuple
+
 import jax
-from jax.sharding import AxisType
+
+try:  # JAX >= 0.5: explicit/auto axis types
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # pinned 0.4.x: no axis types — plain meshes only
+    _AxisType = None
+
+_MAKE_MESH_HAS_AXIS_TYPES = (
+    _AxisType is not None
+    and "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str], *,
+              devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with ``axis_types=Auto`` where supported."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if _MAKE_MESH_HAS_AXIS_TYPES:
+        kwargs["axis_types"] = (_AxisType.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
+
+
+def abstract_mesh(shape: Sequence[int],
+                  axes: Sequence[str]) -> "jax.sharding.AbstractMesh":
+    """Device-free mesh carrying axis sizes (sharding-rule sanity tests).
+
+    Newer JAX: ``AbstractMesh(shape, axis_names)``; 0.4.x takes one
+    ``((name, size), ...)`` tuple — passing ``(2, 2)`` there dies with
+    ``TypeError: 'int' object is not iterable`` when it zips the entries.
+    """
+    from jax.sharding import AbstractMesh
+    params = list(inspect.signature(AbstractMesh.__init__).parameters)
+    if "shape_tuple" in params:        # 0.4.x signature
+        return AbstractMesh(tuple(zip(tuple(axes), tuple(shape))))
+    return AbstractMesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod adds a 2-pod leading axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
     """Single-device mesh with the production axis names (CPU tests)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
+
+
+def make_serving_mesh(n_shards: int, *,
+                      devices: Optional[Sequence] = None):
+    """Mesh for the sharded serving engine: KV page pools (and TP-friendly
+    weight dims) shard over ``model``; the serving batch is host-driven and
+    stays replicated, so ``data`` is 1.  On CPU validate with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if len(devs) < n_shards:
+        raise ValueError(
+            f"serving mesh needs {n_shards} devices, have {len(devs)} "
+            "(CPU: set XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return make_mesh((1, n_shards), ("data", "model"),
+                     devices=devs[:n_shards])

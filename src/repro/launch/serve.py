@@ -3,8 +3,37 @@
 Runs the AsymCache serving stack either for real (reduced model, CPU) or
 in discrete-event mode at full scale.  On a TPU deployment the same entry
 point selects ``attn_impl=pallas`` and the production mesh.
+
+``--devices N`` serves sharded: KV page pools sequence-shard over an
+N-way mesh with the flash-decode LSE merge (docs/ARCHITECTURE.md
+§Sharded serving).  On CPU the device count must be forced before jax
+initializes, which is why it is peeked from argv below.
 """
 import argparse
+import os
+import sys
+
+def _peek_devices(argv):
+    """Pre-argparse peek at --devices (both "--devices N" and
+    "--devices=N" forms); malformed values are left for argparse to
+    reject with a proper usage error."""
+    for i, tok in enumerate(argv):
+        if tok == "--devices" and i + 1 < len(argv):
+            val = argv[i + 1]
+        elif tok.startswith("--devices="):
+            val = tok.split("=", 1)[1]
+        else:
+            continue
+        return val if val.isdigit() and int(val) >= 1 else None
+    return None
+
+
+_n = _peek_devices(sys.argv)  # must precede the first jax import
+if _n is not None:
+    _flag = f"--xla_force_host_platform_device_count={_n}"
+    if _flag not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = \
+            (os.environ.get("XLA_FLAGS", "") + " " + _flag).strip()
 
 import jax
 
@@ -30,7 +59,12 @@ def main() -> None:
     ap.add_argument("--blocks", type=int, default=64)
     ap.add_argument("--attn-impl", default="xla",
                     choices=["xla", "pallas", "pallas_interpret"])
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the engine over N devices (real mode; on "
+                         "CPU forces N host devices before jax init)")
     args = ap.parse_args()
+    if args.devices < 1:
+        ap.error(f"--devices must be >= 1, got {args.devices}")
 
     if args.mode == "real":
         cfg = scaled_config(get_smoke_config(args.arch), dtype="float32")
@@ -40,9 +74,16 @@ def main() -> None:
         wl = multi_turn_workload(WorkloadConfig(
             n_sessions=args.sessions, first_ctx_len=(96, 200),
             output_len=(16, 40), qps=1.0))
+        # shard-divisible pool, never rounded down to zero (at least one
+        # page per shard)
+        n_dev = max(args.devices, 1)
+        blocks = max(n_dev, args.blocks - args.blocks % n_dev)
+        if blocks != args.blocks:
+            print(f"note: --blocks {args.blocks} adjusted to {blocks} "
+                  f"(pool must divide across {n_dev} devices)")
         srv = AsymCacheServer(cfg, params, ServerConfig(
-            policy=args.policy, num_blocks=args.blocks, block_size=16,
-            clock="wall",
+            policy=args.policy, num_blocks=blocks, block_size=16,
+            clock="wall", n_shards=args.devices,
             scheduler=SchedulerConfig(token_budget=128, max_chunk=64,
                                       max_prefills=2, max_decodes=8)))
     else:

@@ -46,6 +46,21 @@ containers, so the fused-dispatch win is gated on exact counters, see
 (``L`` fused vs ``2L`` split per step), valid vs total token rows
 (padded-token fraction), and per-bucket step counts.
 
+Sharded multi-device mode (``mesh`` argument): the KV page pools shard
+over the mesh's ``model`` axis into contiguous runs of ``num_pages / n``
+pages per device (the block manager stripes every sequence's blocks
+across shards), weights shard by ``sharding_rules(cfg, mesh, "decode")``
+(GSPMD tensor parallelism for the projections/FFN/logits), and each
+layer's KV write + fused varlen attention runs under ``shard_map``: every
+shard scatters the new tokens it owns, computes the attention partial
+over its local pages only, and the partials merge through the exact
+log-sum-exp combine (``repro.distributed.flash_decode``) — the
+distributed generalization of Multi-Segment Attention, each shard's
+pages being one segment subset.  In-step COW copies and swap-ins carry
+per-shard queues (cross-shard copies fall back to the eager global-view
+path).  The occupancy-bucket jit cache is unchanged:
+``jit_traces == len(buckets_used)`` holds under ``shard_map`` too.
+
 Engine scope: decoder-only token LMs (dense / MoE / sliding-window mixes).
 SSM-family archs have no evictable KV cache (DESIGN.md §Arch-applicability)
 and are served by the dense decode path in ``repro.models`` instead.
@@ -179,7 +194,8 @@ class StepHandle:
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, ecfg: EngineConfig, params):
+    def __init__(self, cfg: ModelConfig, ecfg: EngineConfig, params,
+                 mesh=None):
         assert cfg.family in ("dense", "moe", "vlm"), cfg.family
         assert not cfg.enc_dec
         assert ecfg.attn_mode in ("fused", "split"), ecfg.attn_mode
@@ -187,17 +203,48 @@ class Engine:
             raise ValueError("legacy assembly implies attn_mode='split'")
         self.cfg = cfg
         self.ecfg = ecfg
-        self.params = params
+        self.mesh = mesh
+        self.n_shards = 1 if mesh is None else int(mesh.shape["model"])
         dt = jnp.dtype(cfg.dtype)
         L = cfg.n_layers
         self.k_pools = jnp.zeros(
             (L, ecfg.num_pages, ecfg.page_size, cfg.n_kv_heads, cfg.head_dim), dt)
         self.v_pools = jnp.zeros_like(self.k_pools)
+        in_shardings = None
+        if self.n_shards > 1:
+            # sharded serving: fused varlen layout only (the split padded
+            # layout predates the work-list/seq_ids metadata the per-shard
+            # partial needs), xla oracle impl (Pallas-on-mesh is a TPU
+            # deployment concern, not a CPU-host-device validation one)
+            assert ecfg.attn_mode == "fused", "sharded engine requires fused"
+            assert ecfg.attn_impl == "xla", "sharded engine requires xla impl"
+            assert ecfg.assembly == "vectorized"
+            assert ecfg.num_pages % self.n_shards == 0, \
+                (ecfg.num_pages, self.n_shards)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.distributed.sharding import serving_param_shardings
+            rules, param_sh = serving_param_shardings(cfg, mesh)
+            self.rules = rules
+            self._pool_sh = NamedSharding(
+                mesh, P(None, "model", None, None, None))
+            self._swap_sh = NamedSharding(
+                mesh, P("model", None, None, None, None, None))
+            self._repl = NamedSharding(mesh, P())
+            self.params = jax.device_put(params, param_sh)
+            self.k_pools = jax.device_put(self.k_pools, self._pool_sh)
+            self.v_pools = jax.device_put(self.v_pools, self._pool_sh)
+            in_shardings = (param_sh, self._pool_sh, self._pool_sh,
+                            {"pack": self._repl, "swap_k": self._swap_sh,
+                             "swap_v": self._swap_sh})
+        else:
+            self.params = params
         self.windows = [int(w) for w in np.asarray(_layer_windows(cfg, L))]
         self._step = jax.jit(
             self._step_impl,
             static_argnums=(4, 5, 6),
-            donate_argnums=(1, 2) if ecfg.donate_pools else ())
+            donate_argnums=(1, 2) if ecfg.donate_pools else (),
+            **({"in_shardings": in_shardings}
+               if in_shardings is not None else {}))
         self.steps_executed = 0
         # trace counter: must equal len(buckets_used) — the
         # compile-once-per-bucket invariant (== 1 in split mode)
@@ -206,10 +253,17 @@ class Engine:
         self._pending_copies: List[Tuple[int, int]] = []
         self._pending_swaps: List[Tuple[int, object]] = []
         # device-resident zero swap payload, reused on swap-free steps
-        # (their destinations are all padded out of range anyway)
-        self._zero_swap = jnp.zeros(
-            (L, ecfg.max_instep_swaps, ecfg.page_size, cfg.n_kv_heads,
-             cfg.head_dim), dt)
+        # (their destinations are all padded out of range anyway).
+        # Sharded mode carries one payload row per shard, sharded over
+        # the leading axis so each device transfers only its own slice.
+        if self.n_shards > 1:
+            self._zero_swap = jax.device_put(jnp.zeros(
+                (self.n_shards, L, ecfg.max_instep_swaps, ecfg.page_size,
+                 cfg.n_kv_heads, cfg.head_dim), dt), self._swap_sh)
+        else:
+            self._zero_swap = jnp.zeros(
+                (L, ecfg.max_instep_swaps, ecfg.page_size, cfg.n_kv_heads,
+                 cfg.head_dim), dt)
         R, QP, B, NP = (ecfg.max_prefills, ecfg.max_chunk,
                         ecfg.max_decodes, ecfg.max_blocks_per_seq)
         self.n_seqs = R + B
@@ -242,6 +296,12 @@ class Engine:
         self.valid_token_rows = 0      # real compute tokens executed
         self.total_token_rows = 0      # token rows incl. bucket padding
         self.bucket_counts: Dict[Tuple[int, int], int] = {}
+        # page-op routing: folded into the jitted step vs eager fallback
+        # (sharded mode also routes cross-shard copies eagerly)
+        self.instep_copies = 0
+        self.eager_copies = 0
+        self.instep_swaps = 0
+        self.eager_swaps = 0
         # packed-input layouts (vectorized assembly): every int32 input in
         # one flat host buffer -> ONE device_put per step instead of ~14;
         # one layout per (t_bucket, np_bucket, w_bucket)
@@ -258,7 +318,10 @@ class Engine:
             return cached
         e = self.ecfg
         R, B = e.max_prefills, e.max_decodes
-        C, S = e.max_instep_copies, e.max_instep_swaps
+        # per-shard in-step op queues: shard i's copies/swaps live in row i
+        # (shard-LOCAL page indices); single-device keeps the flat layout
+        C = self.n_shards * e.max_instep_copies
+        S = self.n_shards * e.max_instep_swaps
         if e.attn_mode == "fused":
             t, n = t_bucket, self.n_seqs
             fields = [("tokens", t), ("positions", t), ("valid", t),
@@ -326,10 +389,18 @@ class Engine:
         # in-step page maintenance: swap-ins land first (they commit pages
         # a COW fork in the same round may use as its donor), then copies;
         # both must precede the KV writes/attention that read those pages
-        k_pools, v_pools = apply_swap_ins(
-            k_pools, v_pools, inp["swap_dst"], inp["swap_k"], inp["swap_v"])
-        k_pools, v_pools = apply_page_copies(
-            k_pools, v_pools, inp["copy_src"], inp["copy_dst"])
+        if self.n_shards > 1:
+            from repro.distributed.flash_decode import sharded_pool_ops
+            k_pools, v_pools = sharded_pool_ops(
+                k_pools, v_pools, inp["swap_dst"], inp["swap_k"],
+                inp["swap_v"], inp["copy_src"], inp["copy_dst"],
+                mesh=self.mesh)
+        else:
+            k_pools, v_pools = apply_swap_ins(
+                k_pools, v_pools, inp["swap_dst"], inp["swap_k"],
+                inp["swap_v"])
+            k_pools, v_pools = apply_page_copies(
+                k_pools, v_pools, inp["copy_src"], inp["copy_dst"])
 
         x = params["embed"][inp["tokens"]]          # (T, d)
         pos = inp["positions"]
@@ -353,6 +424,23 @@ class Engine:
             if cfg.rope_theta > 0:
                 q = apply_rope(q, pos, cfg.rope_theta)
                 k_new = apply_rope(k_new, pos, cfg.rope_theta)
+            if self.n_shards > 1:
+                # per-shard KV write + attention partial + exact LSE
+                # merge, one shard_map per layer (still ONE logical
+                # attention dispatch — each shard computes its segment
+                # subset of the same fused varlen stream)
+                from repro.distributed.flash_decode import sharded_msa_fused
+                kp, vp, attn = sharded_msa_fused(
+                    q, k_pools[l], v_pools[l], k_new, v_new,
+                    inp["write_slot"], inp["write_off"], inp["valid"],
+                    inp["bt"], inp["ctx"], pos, inp["seq_ids"],
+                    mesh=self.mesh, window=window,
+                    softcap=cfg.attn_logit_softcap)
+                k_pools = k_pools.at[l].set(kp)
+                v_pools = v_pools.at[l].set(vp)
+                x = x + jnp.einsum("thk,hkd->td", attn, blk["wo"])
+                x = self._mlp_sublayer(x, blk)
+                continue
             kp, vp = write_kv_pages(
                 k_pools[l], v_pools[l], k_new, v_new,
                 inp["write_slot"], inp["write_off"], inp["valid"])
@@ -379,17 +467,7 @@ class Engine:
                 attn = jnp.concatenate(
                     [op.reshape(RQP, cfg.n_heads, cfg.head_dim), od], axis=0)
             x = x + jnp.einsum("thk,hkd->td", attn, blk["wo"])
-
-            h2 = rms_norm(x, blk["mlp_norm"], cfg.norm_eps)
-            if cfg.moe is not None:
-                y = moe_ffn_local(h2, blk["router"], blk["we1"], blk["we3"],
-                                  blk["we2"], cfg.moe.top_k,
-                                  cfg.moe.capacity_factor,
-                                  dropless=cfg.moe.dropless,
-                                  expert_split=cfg.moe.expert_split)
-            else:
-                y = swiglu_mlp(h2, blk["w1"], blk["w3"], blk["w2"])
-            x = x + y
+            x = self._mlp_sublayer(x, blk)
 
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
@@ -400,6 +478,19 @@ class Engine:
         token_ids = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out_logits = logits if e.return_full_logits else logits[:R]
         return token_ids, out_logits, k_pools, v_pools
+
+    def _mlp_sublayer(self, x, blk):
+        cfg = self.cfg
+        h2 = rms_norm(x, blk["mlp_norm"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y = moe_ffn_local(h2, blk["router"], blk["we1"], blk["we3"],
+                              blk["we2"], cfg.moe.top_k,
+                              cfg.moe.capacity_factor,
+                              dropless=cfg.moe.dropless,
+                              expert_split=cfg.moe.expert_split)
+        else:
+            y = swiglu_mlp(h2, blk["w1"], blk["w3"], blk["w2"])
+        return x + y
 
     # ------------------------------------------------------------------
     def build_inputs(self, plan: StepPlan):
@@ -464,6 +555,11 @@ class Engine:
         buf = inp["pack"]
         out = {name: buf[off:off + size] for name, off, size in layout}
         out["valid"] = out["valid"].astype(bool)
+        if self.n_shards > 1:
+            ns = self.n_shards
+            out["copy_src"] = out["copy_src"].reshape(ns, e.max_instep_copies)
+            out["copy_dst"] = out["copy_dst"].reshape(ns, e.max_instep_copies)
+            out["swap_dst"] = out["swap_dst"].reshape(ns, e.max_instep_swaps)
         if e.attn_mode == "fused":
             out["bt"] = out["bt"].reshape(self.n_seqs, np_bucket)
         else:
@@ -681,6 +777,8 @@ class Engine:
         dropped by the scatter); overflow past the static buckets goes
         eager.  With ``views`` the index fields are written in place into
         the packed buffer (vectorized path)."""
+        if self.n_shards > 1:
+            return self._fold_page_ops_sharded(views)
         e = self.ecfg
         bs = e.page_size
         P = e.num_pages
@@ -693,10 +791,13 @@ class Engine:
             # its donor) must be flushed eagerly first — a same-round
             # swap-in may be the donor of one of these forks
             swaps, self._pending_swaps = self._pending_swaps, []
+            self.eager_swaps += len(swaps)
             for slot, payload in swaps:
                 self.swap_in(slot, payload)
             self.copy_pages(copies[C:])
+            self.eager_copies += len(copies) - C
             copies = copies[:C]
+        self.instep_copies += len(copies)
         # padding repeats the last real copy (idempotent: sources never
         # alias destinations) or is the identity 0 -> 0 on copy-free steps
         pad_src, pad_dst = copies[-1] if copies else (0, 0)
@@ -715,7 +816,9 @@ class Engine:
         if len(swaps) > S:
             for slot, payload in swaps[S:]:       # eager overflow fallback
                 self.swap_in(slot, payload)
+            self.eager_swaps += len(swaps) - S
             swaps = swaps[:S]
+        self.instep_swaps += len(swaps)
         if views is not None:
             swap_dst = views["swap_dst"]
             swap_dst[:] = P
@@ -741,6 +844,80 @@ class Engine:
 
         return dict(copy_src=copy_src, copy_dst=copy_dst,
                     swap_dst=swap_dst, swap_k=swap_k, swap_v=swap_v)
+
+    def _fold_page_ops_sharded(
+            self, views: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """Per-shard routing of queued COW copies / swap-ins.
+
+        Shard i's queue row holds shard-LOCAL page indices (what its
+        ``shard_map`` slice can address).  Copies whose src/dst live on
+        different shards are device-to-device transfers the local scatter
+        cannot express; they — and per-shard overflow — run through the
+        eager global-view fallback, same as the single-device overflow
+        path (the block manager's shard-affine COW placement makes
+        cross-shard forks rare, not impossible)."""
+        assert views is not None        # sharded implies vectorized assembly
+        e = self.ecfg
+        ns = self.n_shards
+        ploc = e.num_pages // ns
+        C, S = e.max_instep_copies, e.max_instep_swaps
+        copies, self._pending_copies = self._pending_copies, []
+        per_c: List[List[Tuple[int, int]]] = [[] for _ in range(ns)]
+        eager_c: List[Tuple[int, int]] = []
+        for src, dst in copies:
+            s1, s2 = src // ploc, dst // ploc
+            if C > 0 and s1 == s2 and len(per_c[s1]) < C:
+                per_c[s1].append((src - s1 * ploc, dst - s1 * ploc))
+            else:
+                eager_c.append((src, dst))
+        self.instep_copies += len(copies) - len(eager_c)
+        self.eager_copies += len(eager_c)
+        swaps, self._pending_swaps = self._pending_swaps, []
+        if eager_c:
+            # eager copies run against the pools BEFORE this step, while
+            # queued swap-ins would land inside it (after the copy reads
+            # its donor) — flush every swap eagerly first, as a same-round
+            # swap-in may be the donor of one of these forks
+            self.eager_swaps += len(swaps)
+            for slot, payload in swaps:
+                self.swap_in(slot, payload)
+            swaps = []
+            self.copy_pages(eager_c)
+        per_s: List[List[Tuple[int, object]]] = [[] for _ in range(ns)]
+        for slot, payload in swaps:
+            sh = slot // ploc
+            if S > 0 and len(per_s[sh]) < S:
+                per_s[sh].append((slot - sh * ploc, payload))
+                self.instep_swaps += 1
+            else:
+                self.swap_in(slot, payload)     # per-shard overflow
+                self.eager_swaps += 1
+        copy_src = views["copy_src"].reshape(ns, C)
+        copy_dst = views["copy_dst"].reshape(ns, C)
+        swap_dst = views["swap_dst"].reshape(ns, S)
+        for i in range(ns):
+            # padding repeats the shard's last real local copy
+            # (idempotent) or is the local identity 0 -> 0
+            ps, pd = per_c[i][-1] if per_c[i] else (0, 0)
+            copy_src[i, :] = ps
+            copy_dst[i, :] = pd
+            for j, (s_, d_) in enumerate(per_c[i]):
+                copy_src[i, j] = s_
+                copy_dst[i, j] = d_
+        swap_dst[:, :] = ploc        # out of local range -> dropped
+        if not any(per_s):
+            return dict(swap_k=self._zero_swap, swap_v=self._zero_swap)
+        L = self.cfg.n_layers
+        dt = np.dtype(self.cfg.dtype)
+        swap_k = np.zeros((ns, L, S, e.page_size, self.cfg.n_kv_heads,
+                           self.cfg.head_dim), dt)
+        swap_v = np.zeros_like(swap_k)
+        for i in range(ns):
+            for j, (ls, (pk, pv)) in enumerate(per_s[i]):
+                swap_dst[i, j] = ls
+                swap_k[i, :, j] = pk
+                swap_v[i, :, j] = pv
+        return dict(swap_k=swap_k, swap_v=swap_v)
 
     # -- copy-on-write page forks (cross-request prefix sharing) --------
     def queue_copies(self, pairs: List[Tuple[int, int]]) -> None:
@@ -805,7 +982,36 @@ class Engine:
                 1.0 - self.valid_token_rows / total,
             "bucket_counts": {f"T{t}xNP{n}": c for (t, n), c
                               in sorted(self.bucket_counts.items())},
+            "instep_copies": self.instep_copies,
+            "eager_copies": self.eager_copies,
+            "instep_swaps": self.instep_swaps,
+            "eager_swaps": self.eager_swaps,
         }
+
+    def collective_counts(self, t_bucket: Optional[int] = None,
+                          np_bucket: Optional[int] = None) -> Dict[str, int]:
+        """Collective ops in one compiled step variant, by kind —
+        deterministic accounting for the sharded engine (wall clock can't
+        measure the merge cost on drifting shared hosts, HLO op counts
+        can).  Counts the whole step: L per-layer LSE merges plus whatever
+        GSPMD inserts for the sharded weights/logits."""
+        from repro.roofline import parse_collectives
+        t_b = t_bucket if t_bucket is not None else self.token_buckets[0]
+        np_b = np_bucket if np_bucket is not None else self.np_buckets[0]
+        _, size = self.pack_layout(t_b, np_b, 0)
+        inp = {"pack": jnp.zeros((size,), jnp.int32),
+               "swap_k": self._zero_swap, "swap_v": self._zero_swap}
+        traces = self.jit_traces
+        try:
+            # lower() always retraces outside the jit cache; the trace
+            # counter must keep meaning "compiled step variants executed"
+            compiled = self._step.lower(self.params, self.k_pools,
+                                        self.v_pools, inp, t_b, np_b,
+                                        0).compile()
+        finally:
+            self.jit_traces = traces
+        coll = parse_collectives(compiled.as_text())
+        return {kind: int(v["count"]) for kind, v in sorted(coll.items())}
 
     # ------------------------------------------------------------------
     def dispatch(self, plan: StepPlan) -> StepHandle:

@@ -121,8 +121,13 @@ class ChunkingScheduler:
         if self.bm.host_blocks > 0:
             for b in range(n_prompt_blocks):
                 if b < len(m.host_hits) and m.host_hits[b] \
-                        and not m.hit_mask[b]:
-                    self.bm.swap_in(hashes[b], req.block_slots[b], b, now)
+                        and not m.hit_mask[b] \
+                        and self.bm.swap_in(hashes[b], req.block_slots[b],
+                                            b, now):
+                    # swap_in returning False = the host LRU dropped the
+                    # key between match() and here (this admission's own
+                    # evictions spill into the host tier); the block stays
+                    # a gap and is recomputed losslessly
                     req.hit_mask[b] = True
                     req.n_hit_blocks += 1
                     swapped.add(b)
@@ -142,6 +147,8 @@ class ChunkingScheduler:
                 b = matched // bs
                 hit = b < n_prompt_blocks and req.hit_mask[b]
                 if not hit and b not in swapped and b < len(req.block_slots):
+                    self._prefer_donor_shard(req, b, donor, swapped,
+                                             n_prompt_blocks)
                     self.bm.fork_into(donor, req.block_slots[b], now)
                     req.n_cow_forks += 1
                     cow_block, cow_until = b, matched
@@ -168,6 +175,31 @@ class ChunkingScheduler:
         req.state = RequestState.PREFILL
         req.reset_assembly_caches()
         return True
+
+    # ------------------------------------------------------------------
+    def _prefer_donor_shard(self, req: Request, b: int, donor: int,
+                            swapped, n_prompt_blocks: int) -> None:
+        """Shard-aware COW placement: the engine can only fold a fork into
+        the jitted step when source and destination pages live on the SAME
+        device shard (a cross-shard copy is a device-to-device transfer,
+        routed through the eager fallback).  Both candidates are fresh
+        uncommitted allocations, so swapping which logical block each one
+        backs is free — do it when it co-locates the fork with its donor."""
+        bm = self.bm
+        if bm.n_shards <= 1:
+            return
+        ds = bm.shard_of(donor)
+        if bm.shard_of(req.block_slots[b]) == ds:
+            return
+        for j, slot in enumerate(req.block_slots):
+            if j == b or j in swapped:
+                continue
+            if j < n_prompt_blocks and req.hit_mask[j]:
+                continue                       # hit slots are not ours to move
+            if bm.shard_of(slot) == ds:
+                req.block_slots[b], req.block_slots[j] = \
+                    slot, req.block_slots[b]
+                return
 
     # ------------------------------------------------------------------
     def _chunk_size(self, n_decodes: int, n_prefills: int) -> int:

@@ -106,6 +106,13 @@ class ServerConfig:
     # "split" = the original padded prefill + decode two-dispatch layout
     # (the baseline benchmarks/kernel_fusion.py compares against).
     attn_mode: str = "fused"
+    # sharded multi-device serving: KV page pools sequence-shard over an
+    # n-way ("data"=1, "model"=n) mesh, weights shard by the decode
+    # sharding rules, and per-shard attention partials merge through the
+    # exact LSE combine (docs/ARCHITECTURE.md §Sharded serving).  Requires
+    # n visible devices (CPU: XLA_FLAGS=--xla_force_host_platform_
+    # device_count=N) and num_blocks % n_shards == 0.  1 = single-device.
+    n_shards: int = 1
     scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
     use_hit_count: bool = True
 
@@ -129,7 +136,8 @@ class AsymCacheServer:
         self.bm = BlockManager(scfg.num_blocks, scfg.block_size, policy,
                                self.cost_model, self.freq,
                                host_blocks=scfg.host_blocks,
-                               prefix_sharing=scfg.prefix_sharing)
+                               prefix_sharing=scfg.prefix_sharing,
+                               n_shards=scfg.n_shards)
         self.sched = ChunkingScheduler(scfg.scheduler, self.bm)
         if scfg.execute_model:
             ecfg = ecfg or EngineConfig(
@@ -138,7 +146,11 @@ class AsymCacheServer:
                 max_prefills=scfg.scheduler.max_prefills,
                 max_decodes=scfg.scheduler.max_decodes,
                 attn_mode=scfg.attn_mode)
-            self.engine = Engine(cfg, ecfg, params)
+            mesh = None
+            if scfg.n_shards > 1:
+                from repro.launch.mesh import make_serving_mesh
+                mesh = make_serving_mesh(scfg.n_shards)
+            self.engine = Engine(cfg, ecfg, params, mesh=mesh)
             # the scheduler picks each step's occupancy bucket from its
             # §5.1 chunk decision — both sides must share one lattice
             self.sched.cfg.token_buckets = self.engine.token_buckets
@@ -307,6 +319,10 @@ class AsymCacheServer:
             "prefix_matches": self.bm.n_prefix_matches,
             "sim_time": self.now,
         })
+        if self.bm.n_shards > 1:
+            # deterministic shard accounting (benchmarks/sharded_serving)
+            out["n_shards"] = self.bm.n_shards
+            out["per_shard_used"] = self.bm.per_shard_used()
         # deterministic hot-path accounting (fused-dispatch + occupancy
         # buckets; empty for the simulated engine)
         out.update(self.engine.perf_counters())

@@ -34,7 +34,13 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer,
 
     ``accum_dtype``: gradient-accumulator dtype.  fp32 by default; for
     >=100B configs the fp32 accumulator alone is 2x param bytes per device,
-    so the launcher selects bf16 there (documented in DESIGN.md §4)."""
+    so the launcher selects bf16 there (documented in DESIGN.md §4).
+
+    Equivalence note: with fp32 accumulation, mean-of-microbatch grads
+    match the full-batch grad to f32 epsilon — the only residual is the
+    batch-dim reduction order inside the per-microbatch GEMMs, which no
+    accumulator dtype can remove (tests/test_training.py bounds the
+    post-optimizer drift instead)."""
     if accum_dtype is None:
         accum_dtype = jnp.bfloat16 if cfg.param_count() >= 100e9 \
             else jnp.float32

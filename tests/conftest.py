@@ -1,6 +1,25 @@
+import os
+import subprocess
+import sys
+import textwrap
+
 import pytest
 
 
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: multi-device subprocess tests (several minutes)")
+
+
+def run_devices(code: str, n_devices: int) -> str:
+    """Run ``code`` in a subprocess with ``n_devices`` forced CPU host
+    devices (jax locks the device count at first init, and the main
+    pytest process must keep seeing 1 CPU device for the smoke tests)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout

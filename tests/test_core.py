@@ -251,6 +251,32 @@ def test_lru_evicts_by_recency_not_position():
     assert m.num_hits == 7
 
 
+def test_stale_host_hit_degrades_to_miss():
+    """A host-tier hit recorded by match() can be LRU-evicted from the
+    host tier by the very evictions the subsequent allocate() triggers
+    (swap-outs overflow the tier).  swap_in must then report False —
+    never KeyError — so the block degrades to a recomputed gap."""
+    fp = FreqParams.from_turning_point(lifespan=10.0)
+    cm = analytic_cost_model(get_config("llama31-8b"))
+    bm = BlockManager(8, 4, make_policy("lru", fp), cm, fp, host_blocks=2)
+    toks = list(range(32))
+    hashes = bm.block_hashes(toks)
+    slots = bm.allocate(8, now=1.0)
+    for i, (s, h) in enumerate(zip(slots, hashes)):
+        bm.commit(s, h, i)
+    bm.release(slots, now=2.0)
+    bm.allocate(8, now=3.0)          # evict all 8; host tier keeps last 2
+    m = bm.match(toks, now=4.0, acquire=False)
+    assert sum(m.host_hits) == 2
+    hit_b = m.host_hits.index(True)
+    # the key vanishes between match() and swap_in (as allocate-triggered
+    # swap-outs would push it out of the host LRU)
+    bm.host_tier.popitem(last=False)
+    assert bm.swap_in(hashes[hit_b], slot=0, block_pos=hit_b,
+                      now=5.0) is False
+    assert bm.blocks[0].key is None  # nothing committed on the stale path
+
+
 def test_ref_counting_protects_blocks():
     bm = _mk_bm(blocks=8)
     toks = list(range(16))

@@ -1,31 +1,20 @@
 """Distribution-layer tests.
 
-Multi-device tests run in subprocesses (jax locks the host device count at
-first init, and the main pytest process must keep seeing 1 CPU device for
-the smoke tests)."""
-import os
-import subprocess
-import sys
-import textwrap
-
+Multi-device tests run in subprocesses (``conftest.run_devices``: jax
+locks the host device count at first init, and the main pytest process
+must keep seeing 1 CPU device for the smoke tests)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import run_devices
 from repro.configs import ARCH_IDS, get_config
 from repro.distributed.sharding import effective_config
 
 
 def _run_devices(code: str, n_devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=900)
-    assert out.returncode == 0, out.stdout + "\n" + out.stderr
-    return out.stdout
+    return run_devices(code, n_devices)
 
 
 # ---------------------------------------------------------------------------
@@ -90,12 +79,11 @@ def test_virtual_expert_split_exactness():
 def test_moe_alltoall_matches_local():
     _run_devices("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
         from repro.configs import get_smoke_config, scaled_config
         from repro.models import init_params, forward
         from repro.distributed.context import use_dist, DistContext
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         cfg = scaled_config(get_smoke_config("kimi-k2-1t-a32b"),
                             dtype="float32")
         params = init_params(cfg, jax.random.PRNGKey(0))
@@ -116,12 +104,11 @@ def test_moe_alltoall_matches_local():
 def test_flash_decode_matches_local():
     _run_devices("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
         from repro.distributed.context import use_dist, DistContext
         from repro.distributed.flash_decode import sharded_decode_attention
         from repro.models.layers import decode_attention
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         ks = jax.random.split(jax.random.PRNGKey(0), 3)
         B, S, H, KH, D = 4, 32, 4, 2, 16
         q = jax.random.normal(ks[0], (B, H, D))
@@ -153,12 +140,11 @@ def test_dryrun_cell_small_mesh():
     identical to the 512-device production run)."""
     _run_devices("""
         import jax, jax.numpy as jnp, dataclasses
-        from jax.sharding import AxisType
         import repro.launch.mesh as mesh_mod
-        mesh_mod.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
-            (2, 2, 2) if multi_pod else (4, 2),
-            ("pod", "data", "model") if multi_pod else ("data", "model"),
-            axis_types=(AxisType.Auto,) * (3 if multi_pod else 2))
+        mesh_mod.make_production_mesh = lambda multi_pod=False: \
+            mesh_mod.make_mesh(
+                (2, 2, 2) if multi_pod else (4, 2),
+                ("pod", "data", "model") if multi_pod else ("data", "model"))
         import repro.launch.dryrun as dr
         dr.make_production_mesh = mesh_mod.make_production_mesh
         import repro.configs.base as cb
@@ -194,8 +180,10 @@ def test_banded_attention_model_equivalence():
 
 def test_sharding_rules_sanity():
     from repro.distributed.sharding import sharding_rules
-    # AbstractMesh carries axis sizes without requiring real devices
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    from repro.launch.mesh import abstract_mesh
+    # AbstractMesh carries axis sizes without requiring real devices; the
+    # compat constructor handles the 0.4.x ((name, size), ...) signature
+    mesh = abstract_mesh((2, 2), ("data", "model"))
     for arch in ARCH_IDS:
         cfg = effective_config(get_config(arch), tp=2, ep=2)
         for kind in ("train", "prefill", "decode"):
