@@ -1,0 +1,207 @@
+"""Online (closed-loop) agent serving vs scripted replay, and predictive
+host-tier prefetch vs demand swap-in (paper §6.5/§8 — the Continuum
+integration claim: AsymCache inside an agent serving system cuts job
+latency; here gated on deterministic counters, not wall clock).
+
+Two A/B pairs through the REAL engine (smoke model, ``clock="model"`` so
+every scheduling/eviction decision is deterministic):
+
+  1. **Closed-loop equivalence.**  The same ``SessionScript``s served (a)
+     as the offline scripted replay (arrivals precomputed as announced
+     tool duration + 0.05) and (b) closed-loop through ``OnlineFrontend``
+     (each next turn generated when the previous turn's last token was
+     actually emitted).  Gate: per (session, turn) the prompt tokens,
+     teacher-forced outputs AND device-side greedy samples are
+     byte-identical — the closed loop changes *when* turns happen, never
+     *what* is computed.
+
+  2. **Predictive prefetch.**  Under memory pressure with a bounded host
+     tier, prefetch ON vs OFF (same seed).  Gates:
+       * resume-time swap-in stalls (demand swap-ins at a resumed turn's
+         admission) drop to **0** with prefetch on — tools are
+         predictable, so the ResumePredictor times every restore ahead of
+         the resume — and are > 0 with it off;
+       * recomputed prompt tokens on resumed turns strictly DECREASE:
+         prefetch rescues blocks from the host LRU before churn drops
+         them, so fewer positions are recomputed;
+       * ``jit_traces == len(buckets_used)`` still holds under the online
+         frontend (closed-loop arrivals must not grow the jit cache).
+
+    PYTHONPATH=src:. python -m benchmarks.run --only agentic_online
+    PYTHONPATH=src:. python benchmarks/agentic_online.py --smoke  # CI gate
+"""
+from __future__ import annotations
+
+import argparse
+from collections import defaultdict
+
+from benchmarks.common import Rows, write_bench_json
+
+BLOCK = 16
+
+
+def _mk_server(cfg, params, num_blocks: int, host_blocks: int):
+    from repro.serving import (AsymCacheServer, EngineConfig,
+                               SchedulerConfig, ServerConfig)
+    scfg = ServerConfig(
+        policy="asymcache", num_blocks=num_blocks, block_size=BLOCK,
+        clock="model", host_blocks=host_blocks,
+        scheduler=SchedulerConfig(token_budget=160, max_chunk=96,
+                                  max_prefills=2, max_decodes=8))
+    ecfg = EngineConfig(num_pages=num_blocks, page_size=BLOCK,
+                        max_prefills=2, max_chunk=96, max_decodes=8,
+                        max_blocks_per_seq=32, max_instep_swaps=4)
+    return AsymCacheServer(cfg, params, scfg, ecfg=ecfg)
+
+
+def _acfg(n_jobs: int, qps: float, seed: int):
+    from repro.serving import AgenticConfig
+    # sized for the smoke model's 32-page tables: max history ~500 tokens
+    return AgenticConfig(
+        n_jobs=n_jobs, seed=seed, tool_calls_per_job=(2, 4),
+        system_prefix_len=32, task_len=(32, 64), tool_result_len=(16, 48),
+        output_len=(12, 24), tool_duration=(0.6, 1.5), qps=qps)
+
+
+def _jit_ok(srv) -> bool:
+    return srv.engine.jit_traces == len(srv.engine.buckets_used)
+
+
+def main(smoke: bool = False, seed: int = 3) -> Rows:
+    import jax
+    from repro.configs import get_smoke_config, scaled_config
+    from repro.models import init_params
+    from repro.serving import (FrontendConfig, OnlineFrontend,
+                               agentic_session_scripts,
+                               requests_from_scripts)
+
+    cfg = scaled_config(get_smoke_config("llama31-8b"), dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rows = Rows()
+
+    # ---- pair 1: closed-loop vs scripted, roomy pool ------------------
+    eq_cfg = _acfg(n_jobs=4 if smoke else 6, qps=1.5, seed=seed)
+    srv_script = _mk_server(cfg, params, num_blocks=256, host_blocks=0)
+    wl = requests_from_scripts(agentic_session_scripts(eq_cfg))
+    res_script = srv_script.run(wl)
+    by_sid = defaultdict(list)
+    for r in sorted(wl, key=lambda r: r.rid):
+        by_sid[r.session_id].append(r)
+
+    srv_online = _mk_server(cfg, params, num_blocks=256, host_blocks=0)
+    fe = OnlineFrontend(srv_online, agentic_session_scripts(eq_cfg),
+                        FrontendConfig(prefetch=False, admission="fcfs"))
+    res_online = fe.run()
+
+    tokens_identical = samples_identical = True
+    n_turns = 0
+    for sess in fe.sessions:
+        assert len(by_sid[sess.sid]) == len(sess.requests)
+        for a, b in zip(by_sid[sess.sid], sess.requests):
+            n_turns += 1
+            if a.prompt_tokens != b.prompt_tokens \
+                    or a.generated != b.generated:
+                tokens_identical = False
+            if a.sampled_ids != b.sampled_ids:
+                samples_identical = False
+
+    # scripted-side JOB latency (whole session: first arrival -> last
+    # turn finish), so the A/B against the closed loop's
+    # agent_job_latency compares like with like — SessionStats'
+    # job_latency_mean is PER-TURN and 3-4 orders of magnitude smaller
+    # (tool durations dominate whole-job latency)
+    span = defaultdict(lambda: [float("inf"), float("-inf")])
+    for r in wl:
+        span[r.session_id][0] = min(span[r.session_id][0], r.arrival)
+        span[r.session_id][1] = max(span[r.session_id][1], r.finished_at)
+    scripted_job_mean = sum(b - a for a, b in span.values()) / len(span)
+
+    rows.add("agentic_online/scripted/agent_job_latency_mean",
+             scripted_job_mean * 1e6,
+             f"turns={res_script['n_requests']};"
+             f"turn_latency_mean_us={res_script['job_latency_mean'] * 1e6:.0f}")
+    rows.add("agentic_online/closed_loop/agent_job_latency_mean",
+             res_online["agent_job_latency_mean"] * 1e6,
+             f"turns={res_online['n_turns']};"
+             f"tokens_identical={tokens_identical};"
+             f"samples_identical={samples_identical}")
+
+    # ---- pair 2: prefetch ON vs OFF under pressure + host tier --------
+    pf_cfg = _acfg(n_jobs=6 if smoke else 8, qps=2.0 if smoke else 1.5,
+                   seed=seed)
+    nb, hb = (40, 24) if smoke else (48, 32)
+    srv_on = _mk_server(cfg, params, num_blocks=nb, host_blocks=hb)
+    res_on = OnlineFrontend(
+        srv_on, agentic_session_scripts(pf_cfg),
+        FrontendConfig(prefetch=True, prefetch_lead=0.3)).run()
+    srv_off = _mk_server(cfg, params, num_blocks=nb, host_blocks=hb)
+    res_off = OnlineFrontend(
+        srv_off, agentic_session_scripts(pf_cfg),
+        FrontendConfig(prefetch=False)).run()
+
+    rows.add("agentic_online/prefetch_on/resume_swap_stalls",
+             res_on["resume_swap_stalls"],
+             f"prefetch_swap_ins={res_on['prefetch_swap_ins']};"
+             f"prefetch_pins={res_on['prefetch_pins']};"
+             f"prefetch_hits={res_on['prefetch_hits']}")
+    rows.add("agentic_online/prefetch_off/resume_swap_stalls",
+             res_off["resume_swap_stalls"],
+             f"swap_ins={res_off['swap_ins']}")
+    rows.add("agentic_online/prefetch_on/resumed_recompute_tokens",
+             res_on["resumed_recompute_tokens"],
+             f"vs_off={res_off['resumed_recompute_tokens']}")
+    rows.add("agentic_online/prefetch_on/agent_job_latency_mean",
+             res_on["agent_job_latency_mean"] * 1e6,
+             f"off={res_off['agent_job_latency_mean'] * 1e6:.0f}us")
+
+    jit_ok = (_jit_ok(srv_script) and _jit_ok(srv_online)
+              and _jit_ok(srv_on) and _jit_ok(srv_off))
+
+    write_bench_json("agentic_online", {
+        "smoke": smoke,
+        "n_turns_compared": n_turns,
+        "tokens_identical": tokens_identical,
+        "samples_identical": samples_identical,
+        "scripted_agent_job_latency_mean": scripted_job_mean,
+        "scripted_turn_latency_mean": res_script["job_latency_mean"],
+        "closed_loop": {k: res_online[k] for k in (
+            "agent_job_latency_mean", "agent_job_latency_p90",
+            "online_ttft_p90", "online_tpot_p90", "n_jobs", "n_turns")},
+        "prefetch_on": {k: res_on[k] for k in (
+            "resume_swap_stalls", "resumed_recompute_tokens",
+            "prefetch_issued", "prefetch_pins", "prefetch_swap_ins",
+            "prefetch_hits", "prefetch_misses", "prefetch_alloc_fail",
+            "swap_ins", "swap_outs", "agent_job_latency_mean")},
+        "prefetch_off": {k: res_off[k] for k in (
+            "resume_swap_stalls", "resumed_recompute_tokens",
+            "swap_ins", "swap_outs", "agent_job_latency_mean")},
+        "jit_traces_equals_buckets_used": jit_ok,
+    })
+
+    # ---- deterministic gates ------------------------------------------
+    assert tokens_identical, \
+        "closed-loop run diverged from the scripted replay (tokens)"
+    assert samples_identical, \
+        "closed-loop run diverged from the scripted replay (greedy samples)"
+    assert jit_ok, "online frontend grew the jit cache off-lattice"
+    assert res_on["prefetch_swap_ins"] > 0, \
+        "prefetch never restored a block from the host tier (no pressure?)"
+    assert res_off["resume_swap_stalls"] > 0, \
+        "no-prefetch baseline had no resume stalls (gate vacuous)"
+    assert res_on["resume_swap_stalls"] == 0, (
+        "predictable tools must resume with zero demand swap-ins, got "
+        f"{res_on['resume_swap_stalls']}")
+    assert res_on["resumed_recompute_tokens"] \
+        < res_off["resumed_recompute_tokens"], (
+        "prefetch did not reduce resumed-turn recompute: "
+        f"{res_on['resumed_recompute_tokens']} vs "
+        f"{res_off['resumed_recompute_tokens']}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config; same deterministic gates")
+    a = ap.parse_args()
+    main(smoke=a.smoke).emit()

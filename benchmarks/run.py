@@ -14,6 +14,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   (ours)      pipeline           overlapped pipeline vs synchronous loop
   Fig. 13     kernel_fusion      fused varlen dispatch vs two-dispatch
   (ours)      sharded_serving    N-way sequence-sharded engine vs single
+  §6.5/§8     agentic_online     closed-loop Continuum frontend + prefetch
 """
 import argparse
 import sys
@@ -36,6 +37,7 @@ MODULES = [
     # runs its measurement in a child process with 4 forced host devices,
     # so it is insensitive to this process's jax device-count lock
     ("sharded_serving", {}),
+    ("agentic_online", {}),
 ]
 
 

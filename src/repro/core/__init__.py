@@ -29,7 +29,7 @@ from repro.core.evictor import (
     make_policy,
 )
 from repro.core.freq import EwmaCounter, FreqParams
-from repro.core.lifespan import LifespanTracker
+from repro.core.lifespan import LifespanTracker, ResumePredictor
 from repro.core.prefix_trie import PrefixMatch, PrefixTrie
 from repro.core.treap import Treap
 
@@ -41,5 +41,6 @@ __all__ = [
     "POLICIES", "AsymCacheEvictor", "AsymCacheLinearEvictor",
     "EvictableMeta", "EvictionPolicy", "LRUEvictor", "MaxScoreEvictor",
     "PensieveEvictor", "make_policy",
-    "EwmaCounter", "FreqParams", "LifespanTracker", "Treap",
+    "EwmaCounter", "FreqParams", "LifespanTracker", "ResumePredictor",
+    "Treap",
 ]

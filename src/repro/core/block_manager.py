@@ -142,6 +142,21 @@ class BlockManager:
         self.n_cow_forks = 0
         self.n_prefix_matches = 0
         self.prefix_tokens_matched = 0
+        # ---- predictive host-tier prefetch (online session serving): the
+        # frontend calls prefetch() ahead of a session's predicted resume;
+        # restored blocks are TTL-pinned until the resume and tracked in
+        # prefetch_slots (slot -> owning session, None = unowned) so
+        # _acquire can count realized prefetch hits — and so only the
+        # OWNING session's resume drops the pin (a foreign session hitting
+        # a shared-prefix block must not strip protection the owner's
+        # still-pending resume relies on).
+        self.prefetch_slots: Dict[int, Optional[int]] = {}
+        self.n_prefetch_issued = 0      # blocks the frontend asked for
+        self.n_prefetch_pins = 0        # already device-resident -> pinned
+        self.n_prefetch_swap_ins = 0    # restored host -> device early
+        self.n_prefetch_hits = 0        # prefetched blocks later acquired
+        self.n_prefetch_misses = 0      # neither on device nor in host tier
+        self.n_prefetch_alloc_fail = 0  # no device slot free to restore into
         # stats
         self.n_lookups = 0
         self.n_hits = 0
@@ -198,7 +213,13 @@ class BlockManager:
 
     def _acquire(self, slot: int, now: float) -> None:
         """Take a reference on a resident block: un-enqueue it from the
-        evictable set and update its frequency/sharing bookkeeping."""
+        evictable set and update its frequency/sharing bookkeeping.
+
+        Prefetch state is deliberately untouched here: ``match`` runs
+        BEFORE admission is known to succeed, and a failed admission's
+        rollback (release) must leave the resume pins standing — the
+        scheduler calls :meth:`realize_prefetch` only once the request is
+        actually admitted."""
         blk = self.blocks[slot]
         if blk.ref_count == 0:
             self.policy.remove(slot)
@@ -345,6 +366,9 @@ class BlockManager:
                 self.n_evictions += 1
             out.append(slot)
         for slot in out:
+            # a reallocated slot is new content: it must not count as a
+            # realized prefetch hit for whatever used to live there
+            self.prefetch_slots.pop(slot, None)
             blk = self.blocks[slot]
             blk.key = None
             blk.ref_count = 1
@@ -441,15 +465,158 @@ class BlockManager:
         self.n_swap_ins += 1
         return True
 
+    # ------------------------------------------------------------------
+    # predictive host-tier prefetch (online session serving / Continuum)
+    # ------------------------------------------------------------------
+    def prefetch(self, hashes: Sequence[int], now: float, until: float,
+                 boost: float = 1.0,
+                 owner: Optional[int] = None) -> Dict[str, int]:
+        """Restore a suspended session's blocks toward the device ahead of
+        its predicted resume (the lifespan-driven prefetch of the online
+        frontend).  For each chain hash, in two passes:
+
+          1. already device-resident  → TTL-pin until ``until`` so it
+             cannot be evicted before the resume;
+          2. in the host tier         → allocate a device slot, swap the
+             payload back in (queued into the engine's in-step swap
+             bucket via ``swap_in_fn``, so it lands inside the next
+             dispatched step, before any attention that reads it), commit
+             and pin.  The transient allocation reference is dropped
+             right away — the pin alone keeps the block resident.
+
+        Pass 1 runs fully before pass 2 because pass 2's allocations may
+        evict; pinning the survivors first keeps them out of the victim
+        set.  Blocks in neither tier are counted as misses (the resumed
+        turn will recompute them losslessly); allocation failure under
+        pool exhaustion makes the prefetch best-effort, never an error.
+        Every restored/pinned slot joins ``prefetch_slots`` under
+        ``owner`` (the suspended session's id) so the resume admission's
+        ``_acquire`` can count realized prefetch hits and drop the
+        then-served pin — only for the OWNING session; a shared-prefix
+        block hit by a foreign session keeps its pin until the owner
+        resumes, the TTL expires, or :meth:`cancel_prefetch` aborts it.
+        A block two sessions prefetch belongs to the later call (the
+        earlier owner's resume then simply leaves the pin to expire).
+        Returns this call's counts."""
+        out = {"pinned": 0, "swapped_in": 0, "missed": 0, "alloc_failed": 0}
+        host_wanted: List[Tuple[int, int]] = []
+        for b, h in enumerate(hashes):
+            self.n_prefetch_issued += 1
+            slot = self.table.get(h)
+            if slot is not None:
+                self.pin([slot], until)
+                if boost > 1.0:
+                    self.blocks[slot].boost = max(
+                        self.blocks[slot].boost, boost)
+                self.prefetch_slots[slot] = owner
+                self.n_prefetch_pins += 1
+                out["pinned"] += 1
+            elif h in self.host_tier:
+                host_wanted.append((b, h))
+            else:
+                self.n_prefetch_misses += 1
+                out["missed"] += 1
+        for b, h in host_wanted:
+            fresh = self.allocate(1, now)
+            if fresh is None:
+                self.n_prefetch_alloc_fail += 1
+                out["alloc_failed"] += 1
+                continue
+            slot = fresh[0]
+            if not self.swap_in(h, slot, b, now):
+                # this loop's own allocations spill evictions into the
+                # host LRU, which may have pushed h out since pass 1 —
+                # degrade to recompute, exactly like the admission path
+                self.release([slot], now)
+                self.n_prefetch_misses += 1
+                out["missed"] += 1
+                continue
+            self.n_prefetch_swap_ins += 1
+            self.pin([slot], until)
+            if boost > 1.0:
+                self.blocks[slot].boost = max(self.blocks[slot].boost, boost)
+            self.prefetch_slots[slot] = owner
+            self.release([slot], now)   # pinned: resident at refcount 0
+            out["swapped_in"] += 1
+        return out
+
+    def realize_prefetch(self, slots: Sequence[int],
+                         owner: Optional[int] = None) -> int:
+        """Mark prefetched blocks as USED by a successfully admitted
+        request: count the realized hits and drop the now-served resume
+        pins.  Only slots the ``owner`` session owns (or unowned
+        prefetches) are realized — a FOREIGN session acquiring a
+        shared-prefix block leaves entry and pin intact, because the
+        owner's resume is still pending and the pin is its only
+        protection once the foreigner releases.  Called by the scheduler
+        AFTER admission succeeds (never on the match of a deferred
+        admission, whose rollback must leave the pins standing)."""
+        n = 0
+        for slot in slots:
+            pf_owner = self.prefetch_slots.get(slot, -1)
+            if pf_owner != -1 and (pf_owner is None or pf_owner == owner):
+                self.prefetch_slots.pop(slot)
+                self.n_prefetch_hits += 1
+                self.blocks[slot].pinned_until = -math.inf
+                n += 1
+        return n
+
+    def cancel_prefetch(self, hashes: Sequence[int], now: float,
+                        owner: Optional[int] = None) -> int:
+        """Drop the resume pins of a cancelled session's prefetched blocks
+        so a dead job stops holding device memory: each still-prefetched
+        slot OWNED by ``owner`` is unpinned and (at refcount 0) returned
+        to the evictable set.  A shared-prefix block meanwhile re-owned
+        by another suspended session's prefetch is left alone.  Returns
+        blocks freed."""
+        n = 0
+        for h in hashes:
+            slot = self.table.get(h)
+            if slot is None or slot not in self.prefetch_slots:
+                continue
+            if self.prefetch_slots[slot] != owner:
+                continue                  # another session's pin now
+            self.prefetch_slots.pop(slot)
+            blk = self.blocks[slot]
+            blk.pinned_until = -math.inf
+            if blk.ref_count == 0 and blk.key is not None \
+                    and slot not in self.policy:
+                self._make_evictable(slot, now)
+            n += 1
+        return n
+
+    def prefetch_counters(self) -> Dict[str, int]:
+        """Deterministic prefetch accounting (benchmarks/agentic_online)."""
+        return {
+            "prefetch_issued": self.n_prefetch_issued,
+            "prefetch_pins": self.n_prefetch_pins,
+            "prefetch_swap_ins": self.n_prefetch_swap_ins,
+            "prefetch_hits": self.n_prefetch_hits,
+            "prefetch_misses": self.n_prefetch_misses,
+            "prefetch_alloc_fail": self.n_prefetch_alloc_fail,
+        }
+
     def earliest_pin_expiry(self, now: float) -> Optional[float]:
         times = [b.pinned_until for b in self.blocks
                  if b.pinned_until > now]
         return min(times) if times else None
 
     def set_boost(self, slots: Sequence[int], boost: float) -> None:
-        """Agentic correction factor (§5.2): tool-call-pending blocks."""
+        """Agentic correction factor (§5.2): tool-call-pending blocks.
+
+        A block already sitting in the evictable set was enqueued with
+        its OLD boost baked into the policy meta (``_make_evictable``
+        folds it into log_cost), so it is re-enqueued — otherwise the
+        online frontend's suspend-time boost (applied right after the
+        finished turn's release) would never reach the eviction
+        ranking."""
         for slot in slots:
-            self.blocks[slot].boost = boost
+            blk = self.blocks[slot]
+            blk.boost = boost
+            if blk.ref_count == 0 and blk.key is not None \
+                    and slot in self.policy:
+                self.policy.remove(slot)
+                self._make_evictable(slot, blk.last_access)
 
     # ------------------------------------------------------------------
     def hit_rate(self) -> float:

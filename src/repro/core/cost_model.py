@@ -35,6 +35,15 @@ from repro.configs.base import ModelConfig
 
 @dataclass
 class CostModel:
+    """The paper's recomputation latency model (§4.3): Eq. 6's fitted
+    constants k1..k6 + β, with :meth:`latency` evaluating Eq. 6 itself,
+    :meth:`block_cost` its Eq.-7 marginal block cost ΔT_B (the
+    time-invariant, position-only quantity the evictor ranks on — via
+    :meth:`log_block_cost`, since the evictor works in log space), and
+    Eq. 4's exact per-token form used by the discrete-event clock
+    (``AsymCacheServer._step_latency``).  ``eff_window`` caps the
+    quadratic term for sliding-window stacks (our generalization beyond
+    the paper)."""
     k: Tuple[float, float, float, float, float, float]  # k1..k6
     beta: float
     eff_window: float = math.inf  # token window capping the quadratic term
@@ -84,7 +93,9 @@ def design_row(l1: float, q1: float, l2: float, q2: float,
 def fit(instances: Sequence[Tuple[float, float, float, float]],
         latencies: Sequence[float],
         eff_window: float = math.inf) -> CostModel:
-    """instances: rows of (l1, q1, l2, q2); latencies: seconds."""
+    """Least-squares fit of Eq. 6's k1..k6 + β from profiled two-segment
+    instances (paper §4.3: R² > 0.999 over 1.1K profiles).
+    ``instances``: rows of (l1, q1, l2, q2); ``latencies``: seconds."""
     X = np.stack([design_row(*row, eff_window) for row in instances])
     y = np.asarray(latencies, dtype=np.float64)
     coef, *_ = np.linalg.lstsq(X, y, rcond=None)
@@ -102,6 +113,10 @@ def fit(instances: Sequence[Tuple[float, float, float, float]],
 
 @dataclass(frozen=True)
 class Hardware:
+    """Chip constants feeding the analytic Eq.-6 instantiation (§4.3's
+    alternative to least-squares fitting — the paper profiles 1.1K
+    instances on H20; the simulator derives the same k's from FLOP/byte
+    counts instead)."""
     name: str = "tpu-v5e"
     flops: float = 197e12          # bf16 FLOP/s per chip
     hbm_bw: float = 819e9          # bytes/s

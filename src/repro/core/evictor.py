@@ -33,12 +33,23 @@ from repro.core.treap import Treap
 
 @dataclass
 class EvictableMeta:
+    """Per-block eviction inputs (paper §4.2): the last-access time that
+    seeds the Eq.-9 frequency term, ``log_cost`` = ln ΔT_B — the Eq.-7
+    marginal recomputation cost of the block at its positional index
+    (computed by ``CostModel.log_block_cost``, with sharing/boost factors
+    folded in by the block manager) — and the exponentially-decayed hit
+    count (the LFU multiplier of §4.2)."""
     last_access: float
     log_cost: float        # ln ΔT_B (position-aware recompute cost)
     count: float = 1.0     # EWMA hit count (≥ small positive)
 
 
 class EvictionPolicy:
+    """Interface over the evictable set (paper §4.2): every policy ranks
+    ref-count-0, unpinned blocks by some priority and surrenders the
+    minimum on ``evict``.  AsymCache's priority is the expected
+    recomputation latency f_B(t)·ΔT_B (Eq. 9 × Eq. 7); the baselines
+    drop one or both factors."""
     name = "base"
 
     def add(self, block_id: int, meta: EvictableMeta) -> None:
@@ -65,7 +76,16 @@ class EvictionPolicy:
 # ---------------------------------------------------------------------------
 
 class AsymCacheEvictor(EvictionPolicy):
-    """Two balanced trees over the time-invariant log-keys (§4.4)."""
+    """Algorithm 1 (paper §4.4–4.5): the O(log n) expected-latency
+    evictor.  The weight w_B(t) = f_B(t)·c_B·ΔT_B uses the Eq.-9
+    piecewise-exponential frequency, whose two segments each satisfy the
+    order-preserving rule (Eq. 8 / Appendix A) — so each segment's
+    ranking lives in its own balanced tree (``bt1``/``bt2``, treaps)
+    under a **time-independent** key (``FreqParams.key1``/``key2``), and
+    EVICT (Algorithm 1, line 8) compares just the two tree minima at the
+    current time, with ln λ (Eq. 10, online lifespan) biasing the second
+    segment.  add/remove/evict are all O(log n) — the Table-2 complexity
+    claim."""
 
     name = "asymcache"
 
@@ -128,7 +148,12 @@ class AsymCacheEvictor(EvictionPolicy):
 
 
 class AsymCacheLinearEvictor(EvictionPolicy):
-    """Same weight function, O(n) scan per eviction (Table 2 baseline)."""
+    """The Table-2 ablation (paper §6.1): the identical Eq.-9 × Eq.-7
+    weight w_B(t) = f_B(t)·c_B·ΔT_B, evaluated by brute force — an O(n)
+    scan per eviction instead of Algorithm 1's two-treap O(log n).
+    Decision-identical to :class:`AsymCacheEvictor` (tested); only the
+    complexity differs, which is what `benchmarks/evictor_complexity.py`
+    measures."""
 
     name = "asymcache-on"
 
@@ -178,7 +203,10 @@ class AsymCacheLinearEvictor(EvictionPolicy):
 # ---------------------------------------------------------------------------
 
 class LRUEvictor(EvictionPolicy):
-    """vLLM-style block-level LRU (prefix caching)."""
+    """vLLM-style block-level LRU — the paper's primary baseline (§6.1,
+    "vLLM-LRU" in Figs. 11/12/15): recency only, no recompute-cost or
+    frequency terms (equivalently Eq. 9 with a single segment and
+    ΔT_B ≡ 1)."""
 
     name = "lru"
 
@@ -210,10 +238,11 @@ class LRUEvictor(EvictionPolicy):
 
 
 class MaxScoreEvictor(EvictionPolicy):
-    """Reuse-probability score (ATC'25 [50] style), Eq.-9 estimated, O(n).
-
-    Evicts the block with minimal estimated reuse probability — i.e. the
-    *maximum* eviction-priority score — ignoring recompute cost."""
+    """Baseline (paper §6.1, the ATC'25 [50]-style "MaxScore"): evicts
+    by minimal estimated reuse probability — the Eq.-9 frequency f_B(t)
+    times the decayed hit count — while IGNORING the Eq.-7 recompute
+    cost ΔT_B entirely.  O(n) scan; isolates how much of AsymCache's win
+    comes from the cost term."""
 
     name = "maxscore"
 
@@ -246,9 +275,13 @@ class MaxScoreEvictor(EvictionPolicy):
 
 
 class PensieveEvictor(EvictionPolicy):
-    """Pensieve [55]: suffix-preferring — inverse-proportional frequency ×
-    positional cost.  1/(1+τ/α) violates the order-preserving rule, so no
-    balanced-tree speedup exists: O(n) per eviction (paper §6.1)."""
+    """Baseline (paper §6.1, Pensieve [55]): suffix-preferring —
+    inverse-proportional frequency 1/(1+τ/α) times the Eq.-7 positional
+    cost.  The hyperbolic frequency violates the order-preserving rule
+    (Eq. 8 / Appendix A: only exponentials keep pairwise order
+    time-invariant), so no balanced-tree speedup exists and eviction is
+    O(n) — the paper's argument for why Eq. 9 must be
+    piecewise-EXPONENTIAL."""
 
     name = "pensieve"
 

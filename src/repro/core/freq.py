@@ -26,7 +26,14 @@ from dataclasses import dataclass
 
 @dataclass(frozen=True)
 class FreqParams:
-    """Derived from the three user-facing hyper-parameters (paper §6.4):
+    """The Eq.-9 piecewise-exponential frequency function (paper §4.4)
+    and its time-invariant tree keys (Eq. 8 / Appendix A: only
+    exponentials preserve pairwise weight order over time, which is what
+    licenses Algorithm 1's balanced trees).  ``key1``/``key2`` are the
+    per-segment log-space keys; ``log_w1``/``log_w2`` evaluate a key's
+    current weight at EVICT time; ``log_lambda_for_lifespan`` is the
+    Eq.-10 online adaptation.  Derived from the three user-facing
+    hyper-parameters (paper §6.4):
 
     * ``lifespan``      — X of the turning point (e.g. P99 reuse interval)
     * ``reuse_prob``    — Y of the turning point (frequency value there)
@@ -81,7 +88,10 @@ class FreqParams:
 
 
 class EwmaCounter:
-    """Exponentially-decayed hit counter (the LFU 'frequency' term)."""
+    """Exponentially-decayed hit counter — §4.2's "historical access
+    frequency with exponential weight decay", the LFU multiplier c_B in
+    the eviction weight f_B(t)·c_B·ΔT_B.  Constant while a block sits in
+    a tree, so Eq. 8's order preservation is intact."""
 
     __slots__ = ("count", "last", "gamma")
 

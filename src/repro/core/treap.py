@@ -25,6 +25,13 @@ class _Node:
 
 
 class Treap:
+    """The balanced tree of Algorithm 1 (paper §4.4–4.5): one per Eq.-9
+    segment, keyed by the time-invariant ``FreqParams.key1``/``key2``
+    (Eq. 8 makes the per-segment ranking constant over time, so the tree
+    never rebalances on clock advance).  EVICT only ever reads
+    :meth:`min`; insert/delete/min are O(log n) expected — the Table-2
+    complexity bound."""
+
     def __init__(self, seed: int = 0):
         self._root: Optional[_Node] = None
         self._rng = random.Random(seed)

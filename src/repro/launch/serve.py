@@ -54,9 +54,15 @@ def main() -> None:
     ap.add_argument("--arch", default="llama31-8b",
                     choices=list(ARCH_IDS) + ["llama31-8b", "llama31-70b"])
     ap.add_argument("--policy", default="asymcache")
-    ap.add_argument("--mode", default="real", choices=["real", "sim"])
+    ap.add_argument("--mode", default="real",
+                    choices=["real", "sim", "online"])
     ap.add_argument("--sessions", type=int, default=4)
     ap.add_argument("--blocks", type=int, default=64)
+    ap.add_argument("--host-blocks", type=int, default=32,
+                    help="host-tier blocks for online mode (0 = off)")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="online mode: disable predictive host-tier "
+                         "prefetch of suspended sessions")
     ap.add_argument("--attn-impl", default="xla",
                     choices=["xla", "pallas", "pallas_interpret"])
     ap.add_argument("--devices", type=int, default=1,
@@ -66,6 +72,31 @@ def main() -> None:
     if args.devices < 1:
         ap.error(f"--devices must be >= 1, got {args.devices}")
 
+    if args.mode == "online":
+        # closed-loop agent serving: sessions suspend on tool calls, the
+        # lifespan predictor prefetches their KV ahead of the resume
+        from repro.serving import (AgenticConfig, FrontendConfig,
+                                   OnlineFrontend, agentic_session_scripts)
+        cfg = scaled_config(get_smoke_config(args.arch), dtype="float32")
+        assert cfg.family in ("dense", "moe"), \
+            f"{args.arch}: engine serves token LMs (DESIGN.md §5)"
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        scripts = agentic_session_scripts(AgenticConfig(
+            n_jobs=args.sessions, tool_calls_per_job=(2, 4),
+            system_prefix_len=32, task_len=(32, 64),
+            tool_result_len=(16, 48), output_len=(12, 24),
+            tool_duration=(0.6, 1.5), qps=1.5))
+        srv = AsymCacheServer(cfg, params, ServerConfig(
+            policy=args.policy, num_blocks=args.blocks, block_size=16,
+            clock="model", host_blocks=args.host_blocks,
+            scheduler=SchedulerConfig(token_budget=160, max_chunk=96,
+                                      max_prefills=2, max_decodes=8)))
+        fe = OnlineFrontend(srv, scripts,
+                            FrontendConfig(prefetch=not args.no_prefetch))
+        res = fe.run()
+        for k, v in res.items():
+            print(f"{k}: {v:.4f}" if isinstance(v, float) else f"{k}: {v}")
+        return
     if args.mode == "real":
         cfg = scaled_config(get_smoke_config(args.arch), dtype="float32")
         assert cfg.family in ("dense", "moe"), \

@@ -1,4 +1,5 @@
 from repro.serving.engine import Engine, EngineConfig, StepHandle
+from repro.serving.frontend import FrontendConfig, OnlineFrontend
 from repro.serving.request import Request, RequestState, SessionStats
 from repro.serving.scheduler import (
     ChunkingScheduler,
@@ -6,13 +7,27 @@ from repro.serving.scheduler import (
     SchedulerConfig,
     StepPlan,
 )
-from repro.serving.server import AsymCacheServer, ServerConfig, reference_logits
+from repro.serving.server import (
+    AsymCacheServer,
+    ScriptedSource,
+    ServerConfig,
+    reference_logits,
+)
+from repro.serving.sessions import (
+    AgentSession,
+    OnlineTelemetry,
+    SessionState,
+)
 from repro.serving.workload import (
     AgenticConfig,
+    SessionScript,
     SharedPrefixConfig,
+    TurnScript,
     WorkloadConfig,
+    agentic_session_scripts,
     agentic_workload,
     multi_turn_workload,
+    requests_from_scripts,
     shared_prefix_workload,
 )
 
@@ -20,7 +35,11 @@ __all__ = [
     "Engine", "EngineConfig", "StepHandle", "Request", "RequestState",
     "SessionStats",
     "ChunkingScheduler", "PrefillChunk", "SchedulerConfig", "StepPlan",
-    "AsymCacheServer", "ServerConfig", "reference_logits",
-    "AgenticConfig", "SharedPrefixConfig", "WorkloadConfig",
-    "agentic_workload", "multi_turn_workload", "shared_prefix_workload",
+    "AsymCacheServer", "ScriptedSource", "ServerConfig", "reference_logits",
+    "FrontendConfig", "OnlineFrontend",
+    "AgentSession", "OnlineTelemetry", "SessionState",
+    "AgenticConfig", "SessionScript", "SharedPrefixConfig", "TurnScript",
+    "WorkloadConfig", "agentic_session_scripts", "agentic_workload",
+    "multi_turn_workload", "requests_from_scripts",
+    "shared_prefix_workload",
 ]

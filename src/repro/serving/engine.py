@@ -949,7 +949,17 @@ class Engine:
         """Copy one block's K/V (all layers) device -> host.
 
         ``np.asarray`` waits for any in-flight step that writes the pool,
-        so pipelined execution cannot hand out stale pages."""
+        so pipelined execution cannot hand out stale pages.  A swap-in
+        still QUEUED for this slot (possible when a prefetched block's
+        pin expires and it is re-evicted before any step dispatched — the
+        payload never reached the pool) is returned directly AND removed
+        from the queue: the queued payload IS the block's content, and
+        letting it land later would clobber whatever the reallocated page
+        holds by then."""
+        for i, (s, payload) in enumerate(self._pending_swaps):
+            if s == slot:
+                del self._pending_swaps[i]
+                return payload
         return (np.asarray(self.k_pools[:, slot]),
                 np.asarray(self.v_pools[:, slot]))
 

@@ -21,6 +21,9 @@ class RequestState(enum.Enum):
     PREFILL = 1
     DECODE = 2
     FINISHED = 3
+    # aborted by the client (online frontend): blocks released immediately,
+    # no stats recorded, the request never re-enters scheduling
+    CANCELLED = 4
 
 
 @dataclass
@@ -36,6 +39,21 @@ class Request:
     # chain-hash namespace: 0 shares blocks across requests; any other
     # value isolates this request (the no-prefix-sharing baseline)
     hash_salt: int = 0
+    # -- online-frontend metadata (closed-loop session serving) -------------
+    # which turn of its session this request is (0 = first); resumed marks
+    # turns that follow a tool-call suspension — their demand swap-ins are
+    # the "resume-time swap-in stalls" predictive prefetch must eliminate
+    turn_index: int = 0
+    resumed: bool = False
+    # tool calls the session still has ahead of it INCLUDING this turn's;
+    # the job-level fewest-remaining-calls-first admission policy sorts on
+    # it (None = unknown -> FCFS ordering among unknowns)
+    remaining_calls: Optional[int] = None
+    # streaming callback ``fn(request, token_id)``, invoked once per
+    # emitted output token (the teacher-forced token, at the step that
+    # dispatched it — device-side greedy samples arrive one step later in
+    # ``sampled_ids``).  May call ``AsymCacheServer.cancel`` to abort.
+    on_token: Optional[object] = None
 
     # -- runtime state ------------------------------------------------------
     state: RequestState = RequestState.WAITING

@@ -60,6 +60,15 @@ class SchedulerConfig:
     decode_threshold: int = 8        # shrink chunks beyond this many decodes
     adaptive_chunking: bool = True
     max_running: int = 64
+    # job-level admission arbitration (online session serving):
+    #   "fcfs"             — submission order (the scripted-replay default)
+    #   "fewest-remaining" — sessions with the fewest remaining tool calls
+    #                        first (shortest-remaining-job-first over agent
+    #                        jobs, the Continuum job scheduler policy);
+    #                        requests without ``remaining_calls`` metadata
+    #                        keep FCFS order among themselves, after those
+    #                        that have it
+    admission: str = "fcfs"
     # occupancy bucket lattices (wired from the engine by the server so
     # both sides agree; empty = scheduler leaves the choice to the
     # engine).  The §5.1 chunk decision above determines a step's token
@@ -111,6 +120,12 @@ class ChunkingScheduler:
         req.block_slots = [
             (m.hit_slots[b] if b < n_prompt_blocks and m.hit_mask[b]
              else next(it)) for b in range(total_blocks)]
+        # admission is now certain: realize any prefetched hits (count
+        # them, drop their served resume pins).  Doing it here — not in
+        # match() — keeps a deferred admission's rollback from stripping
+        # the pins its retry depends on.
+        self.bm.realize_prefetch(
+            [s for s in m.hit_slots if s is not None], req.session_id)
         req.hit_mask = list(m.hit_mask)
         req.n_hit_blocks = m.num_hits
         req.n_total_blocks = max(n_prompt_blocks, 1)
@@ -223,9 +238,19 @@ class ChunkingScheduler:
         c = self.cfg
         self.swaps_this_round = 0
 
-        # 1. admit waiting requests (arrival order; defer on memory pressure)
+        # 1. admit waiting requests (defer on memory pressure).  Default is
+        # arrival order; "fewest-remaining" re-ranks each round by the
+        # session's remaining tool calls (job-level shortest-remaining-
+        # first) — re-sorting per round keeps the rank current as sessions
+        # progress, and the (arrival, rid) tie-break keeps it deterministic
         still_waiting = []
-        for req in self.waiting:
+        waiting = self.waiting
+        if c.admission == "fewest-remaining" and len(waiting) > 1:
+            waiting = sorted(
+                waiting, key=lambda r: (
+                    r.remaining_calls if r.remaining_calls is not None
+                    else (1 << 30), r.arrival, r.rid))
+        for req in waiting:
             if (req.arrival <= now and len(self.running) < c.max_running
                     and self._admit(req, now)):
                 self.running.append(req)
@@ -287,3 +312,28 @@ class ChunkingScheduler:
         self.running.remove(req)
         slots = [s for s in req.block_slots if s is not None]
         self.bm.release(slots, now)
+
+    def cancel(self, req: Request, now: float) -> bool:
+        """Abort a request (online frontend).  Waiting requests just leave
+        the queue (no blocks were allocated); running ones release every
+        block reference immediately — refcounts return to their pre-
+        admission baseline, uncommitted blocks go back to the free list.
+        A step already dispatched with this request keeps executing (its
+        KV writes land in pages that are now reallocatable — any later
+        writer is ordered after it by the pipeline's data dependency) but
+        the request never enters another plan.  Returns False when the
+        request already finished or was never submitted."""
+        if req.state in (RequestState.FINISHED, RequestState.CANCELLED):
+            return False
+        if req in self.waiting:
+            self.waiting.remove(req)
+            req.state = RequestState.CANCELLED
+            req.finished_at = now
+            return True
+        if req not in self.running:
+            return False
+        self.running.remove(req)
+        self.bm.release([s for s in req.block_slots if s is not None], now)
+        req.state = RequestState.CANCELLED
+        req.finished_at = now
+        return True

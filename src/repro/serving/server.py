@@ -70,6 +70,33 @@ class _SimEngine:
         return StepHandle(token_ids=self._ids, prefill_logits=self._logits)
 
 
+class ScriptedSource:
+    """RequestSource over a pre-scripted workload: every arrival time is
+    known up front (the offline replay mode).  The source protocol —
+    ``pop_due`` / ``next_time`` / ``done`` — is what the closed-loop
+    online frontend (`repro.serving.frontend.OnlineFrontend`) implements
+    instead, generating each session's next turn only when the previous
+    turn's last token has actually been emitted."""
+
+    def __init__(self, requests: List[Request]):
+        self._req = sorted(requests, key=lambda r: r.arrival)
+        self._i = 0
+
+    def pop_due(self, now: float) -> List[Request]:
+        out = []
+        while self._i < len(self._req) and self._req[self._i].arrival <= now:
+            out.append(self._req[self._i])
+            self._i += 1
+        return out
+
+    def next_time(self) -> Optional[float]:
+        """Earliest future event (None = nothing more will ever arrive)."""
+        return self._req[self._i].arrival if self._i < len(self._req) else None
+
+    def done(self) -> bool:
+        return self._i >= len(self._req)
+
+
 @dataclass
 class ServerConfig:
     policy: str = "asymcache"
@@ -168,6 +195,12 @@ class AsymCacheServer:
         self.stats = SessionStats()
         self.now = 0.0
         self.control_plane_time = 0.0
+        # online session serving hooks: listeners fire at the end of
+        # _finish (after stats/release) with (request, now); uses_pins
+        # gates the per-step pin-expiry sweep (the frontend's prefetch
+        # pins need it even when continuum_ttl is off)
+        self.finish_listeners: List = []
+        self.uses_pins = scfg.continuum_ttl
 
     # ------------------------------------------------------------------
     def _hashes_for(self, req: Request, n_blocks: int):
@@ -222,7 +255,20 @@ class AsymCacheServer:
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], max_steps: int = 200_000) -> Dict:
-        """Discrete-event main loop over a scripted workload.
+        """Discrete-event main loop over a scripted workload (see
+        :meth:`serve` — this is the ScriptedSource special case)."""
+        return self.serve(ScriptedSource(requests), max_steps=max_steps)
+
+    def serve(self, source, max_steps: int = 200_000) -> Dict:
+        """Discrete-event main loop over a request source.
+
+        ``source`` follows the :class:`ScriptedSource` protocol: it hands
+        over requests due by the current clock (``pop_due``), names the
+        next future event for idle jumps (``next_time``), and says when no
+        further arrivals can come (``done``).  Closed-loop sources (the
+        online frontend) generate arrivals from _finish listeners while
+        the loop runs, and fire their own timed actions — predictive
+        prefetches — from inside ``pop_due``.
 
         With ``pipeline_depth`` ≥ 1 each iteration dispatches step N+1
         before retiring step N: the scripted state update runs immediately
@@ -230,32 +276,30 @@ class AsymCacheServer:
         ``inflight`` until the pipeline is full, at which point the oldest
         step's ids/prefill-logit rows are fetched — by then the device has
         been executing it for a whole scheduling round."""
-        pending = sorted(requests, key=lambda r: r.arrival)
-        next_arrival = 0
         depth = max(0, int(self.scfg.pipeline_depth))
         inflight: Deque[Tuple[StepPlan, StepHandle]] = deque()
         steps = 0
         t_run0 = time.perf_counter()
         t_last_dispatch = t_run0
 
-        while (next_arrival < len(pending) or self.sched.waiting
+        while (not source.done() or self.sched.waiting
                or self.sched.running) and steps < max_steps:
-            # admit arrivals due by now
-            while (next_arrival < len(pending)
-                   and pending[next_arrival].arrival <= self.now):
-                self._on_arrival(pending[next_arrival])
-                next_arrival += 1
+            # admit arrivals due by now (closed-loop sources also fire
+            # their due prefetches inside pop_due)
+            for req in source.pop_due(self.now):
+                self._on_arrival(req)
 
-            if self.scfg.continuum_ttl:
+            if self.uses_pins:
                 self.bm.unpin_expired(self.now)
             t0 = time.perf_counter()
             plan = self.sched.schedule(self.now)
             self.control_plane_time += time.perf_counter() - t0
 
             if plan.empty():
-                # idle: jump to next arrival
-                if next_arrival < len(pending):
-                    self.now = max(self.now, pending[next_arrival].arrival)
+                # idle: jump to the source's next event
+                nt = source.next_time()
+                if nt is not None:
+                    self.now = max(self.now, nt)
                     continue
                 if self.sched.waiting and not self.sched.running:
                     expiry = self.bm.earliest_pin_expiry(self.now)
@@ -319,6 +363,7 @@ class AsymCacheServer:
             "prefix_matches": self.bm.n_prefix_matches,
             "sim_time": self.now,
         })
+        out.update(self.bm.prefetch_counters())
         if self.bm.n_shards > 1:
             # deterministic shard accounting (benchmarks/sharded_serving)
             out["n_shards"] = self.bm.n_shards
@@ -339,9 +384,16 @@ class AsymCacheServer:
         is exactly what makes the one-step-deep overlap legal: the next
         step can be scheduled against fully updated host state while the
         device is still executing this one.  The logits/ids fetch lives in
-        :meth:`_retire`."""
+        :meth:`_retire`.
+
+        Requests cancelled mid-step (a streaming ``on_token`` callback or
+        the frontend may abort any request while this loop runs) are
+        skipped: their blocks are already released and they must not emit
+        tokens or finish."""
         for r, chunk in enumerate(plan.prefills):
             req = chunk.req
+            if req.state is RequestState.CANCELLED:
+                continue
             self._commit_ready_blocks(req, int(chunk.positions[-1]) + 1)
             if chunk.completes_prefill:
                 req.state = RequestState.DECODE
@@ -350,14 +402,21 @@ class AsymCacheServer:
                     # prompt is now resident: index it for prefix sharing
                     self.bm.register_prefix(req.prompt_tokens)
                 req.generated.append(int(req.output_script[0]))
-                if len(req.output_script) <= 1:
+                if req.on_token is not None:
+                    req.on_token(req, req.generated[-1])
+                if req.state is RequestState.DECODE \
+                        and len(req.output_script) <= 1:
                     self._finish(req)
         for req in plan.decodes:
+            if req.state is not RequestState.DECODE:
+                continue               # cancelled (or already finished)
             p = req.prompt_len + len(req.generated) - 1
             if (p + 1) % self.scfg.block_size == 0:
                 self._commit_ready_blocks(req, p + 1)
             req.generated.append(int(req.output_script[len(req.generated)]))
-            if req.decode_done:
+            if req.on_token is not None:
+                req.on_token(req, req.generated[-1])
+            if req.state is RequestState.DECODE and req.decode_done:
                 self._finish(req)
 
     def _retire(self, plan: StepPlan, handle: StepHandle) -> None:
@@ -400,6 +459,20 @@ class AsymCacheServer:
             self.bm.set_boost(slots, self.scfg.tool_boost)
         self.sched.finish(req, self.now)
         self.stats.record(req)
+        # online session serving: the closed-loop frontend schedules the
+        # session's next turn / suspension from here — AFTER release, so a
+        # listener that boosts or pins the request's blocks sees their
+        # post-release refcounts (and no allocation can have intervened)
+        for fn in self.finish_listeners:
+            fn(req, self.now)
+
+    # ------------------------------------------------------------------
+    def cancel(self, req: Request) -> bool:
+        """Abort a request (streaming/cancellation API of the online
+        frontend — safe to call from an ``on_token`` callback).  Releases
+        every block reference immediately; refcounts return to their
+        pre-admission baseline.  Finish listeners do NOT fire."""
+        return self.sched.cancel(req, self.now)
 
 
 # ---------------------------------------------------------------------------

@@ -37,7 +37,13 @@ class WorkloadConfig:
 
 
 def _gamma_interval(rng: random.Random, rate: float, cv: float) -> float:
-    """Sample an inter-arrival from a Gamma with mean 1/rate and given CV."""
+    """Sample an inter-arrival from a Gamma with mean 1/rate and given CV.
+
+    ``cv=0`` is the deterministic limit (a Gamma's shape → ∞ as CV → 0):
+    every interval is exactly the mean ``1/rate`` — the fixed-rate arrival
+    process, useful for reproducible pacing experiments."""
+    if cv <= 0.0:
+        return 1.0 / rate
     shape = 1.0 / (cv * cv)
     scale = 1.0 / (rate * shape)
     return rng.gammavariate(shape, scale)
@@ -86,40 +92,115 @@ class AgenticConfig:
     tool_result_len: Tuple[int, int] = (32, 128)
     output_len: Tuple[int, int] = (24, 64)
     tool_duration: Tuple[float, float] = (0.5, 2.0)   # predictable, short
+    # fractional deviation of the ACTUAL tool run from the announced
+    # duration: actual = announced * (1 + U(-jitter, +jitter)).  0 = the
+    # perfectly predictable tools of the Continuum setting; > 0 exercises
+    # the ResumePredictor's error correction (closed-loop frontend only —
+    # the scripted replay always paces by the announced duration).
+    tool_jitter: float = 0.0
     vocab: int = 250
     qps: float = 0.5
     seed: int = 0
 
 
-def agentic_workload(cfg: AgenticConfig) -> List[Request]:
-    """Tool-calling jobs: each model turn emits a tool call; the tool runs
-    for a short deterministic duration, then the next turn arrives with
-    history + tool result appended."""
+@dataclass
+class TurnScript:
+    """One scripted model turn of an agent job: the forced output tokens,
+    the tool result appended to the history afterwards, and the tool
+    timing.  ``tool_duration`` is what the job ANNOUNCES (the Continuum
+    TTL estimate); ``actual_duration`` is how long the tool really runs —
+    the closed-loop frontend resumes the session ``actual_duration`` after
+    the turn's last token, whereas the scripted replay paces by the
+    announced value."""
+    output: List[int]
+    tool_result: List[int]
+    is_tool: bool
+    tool_duration: float
+    actual_duration: float
+
+
+@dataclass
+class SessionScript:
+    """Deterministic description of one agent job: the initial context and
+    the full turn sequence.  The SAME scripts drive both execution modes —
+    the offline scripted replay (:func:`requests_from_scripts`) and the
+    closed-loop online frontend (`repro.serving.frontend`) — which is what
+    makes the two byte-comparable per turn."""
+    sid: int
+    arrival: float
+    history0: List[int]
+    turns: List[TurnScript]
+
+    @property
+    def n_tool_calls(self) -> int:
+        return sum(1 for t in self.turns if t.is_tool)
+
+
+def agentic_session_scripts(cfg: AgenticConfig) -> List[SessionScript]:
+    """Generate the token/timing scripts of an agentic workload.
+
+    Draws from the RNG in exactly the order the original flat generator
+    did, so a given seed keeps producing the identical workload.  Jitter
+    (``cfg.tool_jitter``) is drawn from a SEPARATE stream so enabling it
+    never perturbs the token content."""
     rng = random.Random(cfg.seed)
+    jrng = random.Random((cfg.seed << 16) ^ 0x9E3779B9)
     system_prefix = _tokens(rng, cfg.system_prefix_len, cfg.vocab)
-    requests: List[Request] = []
-    rid = 0
+    scripts: List[SessionScript] = []
     t = 0.0
     for job in range(cfg.n_jobs):
         t += _gamma_interval(rng, cfg.qps, 0.25)
-        history = list(system_prefix) + _tokens(
+        history0 = list(system_prefix) + _tokens(
             rng, rng.randint(*cfg.task_len), cfg.vocab)
-        turn_time = t
+        turns: List[TurnScript] = []
         n_calls = rng.randint(*cfg.tool_calls_per_job)
         for call in range(n_calls + 1):
             is_tool = call < n_calls
             output = _tokens(rng, rng.randint(*cfg.output_len), cfg.vocab)
             tool_dur = rng.uniform(*cfg.tool_duration) if is_tool else 0.0
-            requests.append(Request(
-                rid=rid, session_id=job, prompt_tokens=list(history),
-                output_script=output, arrival=turn_time,
-                is_tool_call=is_tool, tool_duration=tool_dur))
-            rid += 1
             result = _tokens(rng, rng.randint(*cfg.tool_result_len), cfg.vocab)
-            history = history + output + result
-            turn_time += tool_dur + 0.05   # tool latency dominates the gap
+            actual = tool_dur
+            if is_tool and cfg.tool_jitter > 0.0:
+                actual = tool_dur * (
+                    1.0 + jrng.uniform(-cfg.tool_jitter, cfg.tool_jitter))
+            turns.append(TurnScript(output=output, tool_result=result,
+                                    is_tool=is_tool, tool_duration=tool_dur,
+                                    actual_duration=actual))
+        scripts.append(SessionScript(sid=job, arrival=t, history0=history0,
+                                     turns=turns))
+    return scripts
+
+
+def requests_from_scripts(scripts: List[SessionScript],
+                          gap: float = 0.05) -> List[Request]:
+    """Offline scripted replay of session scripts: every turn's arrival is
+    precomputed as ``previous arrival + announced tool duration + gap`` —
+    the OPEN-loop approximation the closed-loop frontend replaces (it
+    ignores when the previous turn's generation actually finished)."""
+    requests: List[Request] = []
+    rid = 0
+    for s in scripts:
+        history = list(s.history0)
+        turn_time = s.arrival
+        for turn in s.turns:
+            requests.append(Request(
+                rid=rid, session_id=s.sid, prompt_tokens=list(history),
+                output_script=list(turn.output), arrival=turn_time,
+                is_tool_call=turn.is_tool, tool_duration=turn.tool_duration))
+            rid += 1
+            history = history + turn.output + turn.tool_result
+            turn_time += turn.tool_duration + gap  # tool latency dominates
     requests.sort(key=lambda r: r.arrival)
     return requests
+
+
+def agentic_workload(cfg: AgenticConfig) -> List[Request]:
+    """Tool-calling jobs: each model turn emits a tool call; the tool runs
+    for a short deterministic duration, then the next turn arrives with
+    history + tool result appended.  (Scripted replay of
+    :func:`agentic_session_scripts`; serve the same scripts closed-loop
+    with `repro.serving.frontend.OnlineFrontend`.)"""
+    return requests_from_scripts(agentic_session_scripts(cfg))
 
 
 @dataclass

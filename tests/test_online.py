@@ -1,0 +1,427 @@
+"""Online session serving: closed-loop equivalence with the scripted
+replay, predictive host-tier prefetch, cancellation/streaming, the
+fewest-remaining-calls admission policy, and the cv=0 workload fix."""
+import math
+import random
+
+import jax
+import pytest
+
+from repro.configs import get_config, get_smoke_config, scaled_config
+from repro.core import (
+    H20,
+    BlockManager,
+    FreqParams,
+    ResumePredictor,
+    analytic_cost_model,
+    make_policy,
+)
+from repro.models import init_params
+from repro.serving import (
+    AgenticConfig,
+    AsymCacheServer,
+    EngineConfig,
+    FrontendConfig,
+    OnlineFrontend,
+    RequestState,
+    SchedulerConfig,
+    ServerConfig,
+    SessionState,
+    agentic_session_scripts,
+    agentic_workload,
+    multi_turn_workload,
+    requests_from_scripts,
+)
+from repro.serving.workload import WorkloadConfig, _gamma_interval
+
+KEY = jax.random.PRNGKey(0)
+
+ACFG = dict(tool_calls_per_job=(2, 3), system_prefix_len=32,
+            task_len=(32, 64), tool_result_len=(16, 48),
+            output_len=(12, 24), tool_duration=(0.6, 1.5), qps=1.5)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = scaled_config(get_smoke_config("llama31-8b"), dtype="float32")
+    params = init_params(cfg, KEY)
+    return cfg, params
+
+
+def _real_server(cfg, params, num_blocks=256, host_blocks=0):
+    scfg = ServerConfig(
+        policy="asymcache", num_blocks=num_blocks, block_size=16,
+        clock="model", host_blocks=host_blocks,
+        scheduler=SchedulerConfig(token_budget=160, max_chunk=96,
+                                  max_prefills=2, max_decodes=8))
+    ecfg = EngineConfig(num_pages=num_blocks, page_size=16, max_prefills=2,
+                        max_chunk=96, max_decodes=8, max_blocks_per_seq=32)
+    return AsymCacheServer(cfg, params, scfg, ecfg=ecfg)
+
+
+def _sim_server(num_blocks, host_blocks=0):
+    cfg = get_config("llama31-8b")
+    cm = analytic_cost_model(cfg, H20)
+    scfg = ServerConfig(
+        policy="asymcache", num_blocks=num_blocks, block_size=16,
+        clock="model", execute_model=False, host_blocks=host_blocks,
+        scheduler=SchedulerConfig(token_budget=192, max_chunk=96,
+                                  max_prefills=2, max_decodes=16))
+    return AsymCacheServer(cfg, None, scfg, cost_model=cm, sim_cost_model=cm)
+
+
+# ---------------------------------------------------------------------------
+# workload fix: cv=0 means deterministic inter-arrivals
+# ---------------------------------------------------------------------------
+
+def test_gamma_cv_zero_deterministic():
+    rng = random.Random(0)
+    assert _gamma_interval(rng, rate=2.0, cv=0.0) == 0.5
+    assert _gamma_interval(rng, rate=0.25, cv=0.0) == 4.0
+    # end to end: a cv=0 workload builds (used to raise ZeroDivisionError)
+    wl = multi_turn_workload(WorkloadConfig(n_sessions=3, cv=0.0, qps=2.0,
+                                            seed=1))
+    assert len(wl) > 0
+    # session start times are exactly 1/qps apart in the cv=0 limit
+    per_session = {}
+    for r in wl:
+        per_session.setdefault(r.session_id, []).append(r.arrival)
+    starts = sorted(min(v) for v in per_session.values())
+    for a, b in zip(starts, starts[1:]):
+        assert b - a == pytest.approx(0.5)
+
+
+def test_gamma_cv_positive_unchanged():
+    a = _gamma_interval(random.Random(7), rate=1.0, cv=0.25)
+    b = _gamma_interval(random.Random(7), rate=1.0, cv=0.25)
+    assert a == b and a > 0 and a != 1.0
+
+
+# ---------------------------------------------------------------------------
+# closed-loop equivalence (real engine)
+# ---------------------------------------------------------------------------
+
+def test_closed_loop_matches_scripted(small_model):
+    """The closed loop changes WHEN turns happen, never WHAT is computed:
+    per (session, turn), prompts, teacher-forced outputs and device-side
+    greedy samples are byte-identical to the offline scripted replay."""
+    cfg, params = small_model
+    acfg = AgenticConfig(n_jobs=3, seed=5, **ACFG)
+
+    srv_a = _real_server(cfg, params)
+    wl = requests_from_scripts(agentic_session_scripts(acfg))
+    srv_a.run(wl)
+    by_sid = {}
+    for r in sorted(wl, key=lambda r: r.rid):
+        by_sid.setdefault(r.session_id, []).append(r)
+
+    srv_b = _real_server(cfg, params)
+    fe = OnlineFrontend(srv_b, agentic_session_scripts(acfg),
+                        FrontendConfig(prefetch=False, admission="fcfs"))
+    res = fe.run()
+    assert res["closed_loop"] and res["n_turns"] == len(wl)
+
+    for sess in fe.sessions:
+        assert sess.state is SessionState.FINISHED
+        assert len(by_sid[sess.sid]) == len(sess.requests)
+        for a, b in zip(by_sid[sess.sid], sess.requests):
+            assert a.prompt_tokens == b.prompt_tokens
+            assert a.generated == b.generated
+            assert a.sampled_ids == b.sampled_ids
+    # closed-loop arrivals must not grow the jit cache off-lattice
+    assert srv_b.engine.jit_traces == len(srv_b.engine.buckets_used)
+    # closed-loop resumes happen strictly AFTER the previous turn's
+    # finish + tool duration (the scripted replay's fixed 0.05 gap does
+    # not apply)
+    for sess in fe.sessions:
+        for prev, nxt in zip(sess.requests, sess.requests[1:]):
+            assert nxt.arrival == pytest.approx(
+                prev.finished_at + prev.tool_duration)
+
+
+# ---------------------------------------------------------------------------
+# predictive prefetch (discrete-event mode: fast, fully deterministic)
+# ---------------------------------------------------------------------------
+
+def test_prefetch_eliminates_resume_stalls():
+    acfg = AgenticConfig(n_jobs=8, seed=3, **ACFG)
+    res = {}
+    for prefetch in (True, False):
+        srv = _sim_server(num_blocks=48, host_blocks=32)
+        fe = OnlineFrontend(srv, agentic_session_scripts(acfg),
+                            FrontendConfig(prefetch=prefetch,
+                                           prefetch_lead=0.3))
+        res[prefetch] = fe.run()
+    on, off = res[True], res[False]
+    # the baseline actually stalls (otherwise the gate is vacuous)
+    assert off["resume_swap_stalls"] > 0
+    # predictable tools -> every restore lands ahead of the resume
+    assert on["resume_swap_stalls"] == 0
+    assert on["prefetch_swap_ins"] > 0
+    assert on["prefetch_hits"] > 0
+    # rescuing blocks from the host LRU avoids recompute
+    assert on["resumed_recompute_tokens"] < off["resumed_recompute_tokens"]
+
+
+def test_prefetch_requires_prefix_sharing():
+    srv = _sim_server(num_blocks=64)
+    srv.scfg.prefix_sharing = False
+    with pytest.raises(ValueError):
+        OnlineFrontend(srv, agentic_session_scripts(
+            AgenticConfig(n_jobs=1, **ACFG)), FrontendConfig(prefetch=True))
+
+
+def test_block_manager_prefetch_roundtrip():
+    """Unit: evict committed blocks into the host tier, prefetch them
+    back, and verify pins + counters + realized-hit accounting."""
+    fp = FreqParams.from_turning_point(10.0)
+    bm = BlockManager(8, 4, make_policy("asymcache", fp),
+                      analytic_cost_model(get_config("llama31-8b")), fp,
+                      host_blocks=8)
+    toks = list(range(32))                       # 8 blocks
+    hashes = bm.block_hashes(toks)
+    slots = bm.allocate(8, now=1.0)
+    for i, (s, h) in enumerate(zip(slots, hashes)):
+        bm.commit(s, h, i)
+    bm.release(slots, now=2.0)
+    bm.allocate(8, now=3.0)                      # evict all -> host tier
+    assert bm.n_swap_outs == 8 and len(bm.table) == 0
+
+    # device pool is now fully referenced; free it so prefetch can allocate
+    bm.release(list(range(8)), now=4.0)
+    out = bm.prefetch(hashes[:4], now=5.0, until=100.0)
+    assert out["swapped_in"] == 4 and out["alloc_failed"] == 0
+    assert bm.n_prefetch_swap_ins == 4
+    # restored blocks are resident, pinned, refcount 0
+    restored = [bm.table[h] for h in hashes[:4]]
+    for s in restored:
+        assert bm.blocks[s].ref_count == 0
+        assert bm.blocks[s].pinned_until == 100.0
+        assert s not in bm.policy                # pinned -> unevictable
+    # a later ADMITTED match realizes the prefetch hits (the scheduler
+    # calls realize_prefetch only once admission succeeded); an unowned
+    # prefetch realizes for any owner, dropping its served pin
+    m = bm.match(toks[:16], now=6.0)
+    assert m.num_hits == 4
+    assert bm.n_prefetch_hits == 0               # match alone: unrealized
+    assert bm.realize_prefetch(restored, owner=1) == 4
+    assert bm.n_prefetch_hits == 4
+    for s in restored:
+        assert bm.blocks[s].pinned_until == -math.inf
+    bm.release(restored, now=6.5)
+
+    # blocks gone from both tiers count as misses, not errors
+    out2 = bm.prefetch([hash("nope")], now=7.0, until=100.0)
+    assert out2["missed"] == 1
+
+    # cancelling a session's prefetch unpins and re-enqueues its blocks
+    out3 = bm.prefetch(hashes[4:6], now=8.0, until=200.0, owner=2)
+    assert out3["swapped_in"] == 2
+    freed = bm.cancel_prefetch(hashes[4:6], now=9.0, owner=2)
+    assert freed == 2
+    for h in hashes[4:6]:
+        s = bm.table[h]
+        assert bm.blocks[s].pinned_until == -math.inf
+        assert s in bm.policy                    # evictable again
+
+
+def test_prefetch_pin_ownership():
+    """A foreign session hitting a shared-prefix block must not strip
+    the resume pin the owning session's prefetch installed; the owner's
+    own resume does (and realizes the hit)."""
+    fp = FreqParams.from_turning_point(10.0)
+    bm = BlockManager(8, 4, make_policy("asymcache", fp),
+                      analytic_cost_model(get_config("llama31-8b")), fp,
+                      host_blocks=8)
+    toks = list(range(8))                        # 2 blocks
+    hashes = bm.block_hashes(toks)
+    slots = bm.allocate(2, now=1.0)
+    for i, (s, h) in enumerate(zip(slots, hashes)):
+        bm.commit(s, h, i)
+    bm.release(slots, now=2.0)
+
+    out = bm.prefetch(hashes, now=3.0, until=50.0, owner=7)
+    assert out["pinned"] == 2                    # resident -> pinned
+    # foreign session (sid 3) shares the prefix: its admission acquires
+    # and realizes — but the pin and the prefetch entry survive for the
+    # owner's pending resume
+    m = bm.match(toks, now=4.0)
+    assert m.num_hits == 2
+    assert bm.realize_prefetch(slots, owner=3) == 0
+    assert bm.n_prefetch_hits == 0
+    for s in slots:
+        assert bm.blocks[s].pinned_until == 50.0
+        assert s in bm.prefetch_slots
+    bm.release(slots, now=4.5)
+    for s in slots:
+        assert s not in bm.policy                # still pinned, unevictable
+    # a deferred admission's rollback (match -> release, no realize)
+    # leaves pins standing too — the scenario realize-after-admit exists
+    # for: the retry must still find the blocks protected
+    bm.match(toks, now=4.7)
+    bm.release(slots, now=4.8)
+    for s in slots:
+        assert bm.blocks[s].pinned_until == 50.0 and s not in bm.policy
+    # the owner resumes: hits realized, pins dropped
+    bm.match(toks, now=5.0)
+    assert bm.realize_prefetch(slots, owner=7) == 2
+    assert bm.n_prefetch_hits == 2
+    for s in slots:
+        assert bm.blocks[s].pinned_until == -math.inf
+
+
+def test_set_boost_reranks_enqueued_blocks():
+    """Regression: the suspend-time §5.2 boost is applied AFTER the
+    finished turn's release enqueued the blocks — set_boost must re-rank
+    the already-enqueued policy entries, not just mutate blk.boost."""
+    fp = FreqParams.from_turning_point(10.0)
+    policy = make_policy("asymcache", fp)
+    bm = BlockManager(4, 4, policy,
+                      analytic_cost_model(get_config("llama31-8b")), fp)
+    slots = bm.allocate(2, now=1.0)
+    toks = list(range(8))
+    for i, (s, h) in enumerate(zip(slots, bm.block_hashes(toks))):
+        bm.commit(s, h, i)
+    bm.release(slots, now=2.0)                   # both enqueued, boost 1
+    w0 = policy.log_weight(slots[0], now=3.0)
+    bm.set_boost([slots[0]], 8.0)
+    w1 = policy.log_weight(slots[0], now=3.0)
+    assert w1 == pytest.approx(w0 + math.log(8.0))
+    # the boosted block now outranks (survives) its unboosted sibling
+    assert policy.evict(now=3.0) == slots[1]
+
+
+def test_swap_out_returns_queued_payload(small_model):
+    """Regression: a block evicted while its (prefetch) swap-in is still
+    queued must spill the QUEUED payload — the pool page never received
+    it — and the obsolete queue entry must not land later and clobber the
+    reallocated page."""
+    cfg, params = small_model
+    srv = _real_server(cfg, params, num_blocks=32, host_blocks=8)
+    eng = srv.engine
+    marker = ("k-payload", "v-payload")
+    eng.queue_swap_in(3, marker)
+    assert eng.swap_out(3) is marker
+    assert eng._pending_swaps == []
+    # with nothing queued, swap_out reads the real pool page
+    k, v = eng.swap_out(3)
+    assert k.shape[0] == cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# streaming + cancellation
+# ---------------------------------------------------------------------------
+
+def test_cancel_mid_decode_frees_blocks():
+    """Cancelling a job mid-decode releases every block reference
+    immediately; the rest of the fleet runs to completion and refcounts
+    return to baseline (all zero)."""
+    acfg = AgenticConfig(n_jobs=4, seed=9, **ACFG)
+    srv = _sim_server(num_blocks=256)
+    seen = {}
+
+    def on_token(req, tok):
+        seen[req.rid] = seen.get(req.rid, 0) + 1
+        if req.session_id == 2 and req.turn_index == 1 \
+                and seen[req.rid] == 3:
+            fe.cancel_session(2)
+
+    fe = OnlineFrontend(srv, agentic_session_scripts(acfg),
+                        FrontendConfig(prefetch=False), on_token=on_token)
+    res = fe.run()
+
+    cancelled = fe.sessions[2]
+    assert cancelled.state is SessionState.CANCELLED
+    victim = cancelled.requests[-1]
+    assert victim.state is RequestState.CANCELLED
+    assert len(victim.generated) == 3            # stopped mid-decode
+    assert victim not in srv.sched.running and victim not in srv.sched.waiting
+    # every other session finished every turn
+    for sess in fe.sessions:
+        if sess.sid != 2:
+            assert sess.state is SessionState.FINISHED
+    assert res["cancelled_jobs"] == 1 and res["cancelled_turns"] == 1
+    # refcount baseline: nothing leaked
+    assert all(b.ref_count == 0 for b in srv.bm.blocks)
+
+
+def test_streaming_callback_sees_every_token():
+    acfg = AgenticConfig(n_jobs=2, seed=1, **ACFG)
+    srv = _sim_server(num_blocks=256)
+    per_rid = {}
+
+    def on_token(req, tok):
+        per_rid.setdefault(req.rid, []).append(tok)
+
+    fe = OnlineFrontend(srv, agentic_session_scripts(acfg),
+                        FrontendConfig(prefetch=False), on_token=on_token)
+    fe.run()
+    for sess in fe.sessions:
+        for req in sess.requests:
+            assert per_rid[req.rid] == req.output_script
+
+
+# ---------------------------------------------------------------------------
+# job-level admission policy
+# ---------------------------------------------------------------------------
+
+def test_fewest_remaining_admission_order():
+    fp = FreqParams.from_turning_point(10.0)
+    bm = BlockManager(256, 16, make_policy("lru", fp),
+                      analytic_cost_model(get_config("llama31-8b")), fp)
+    from repro.serving.scheduler import ChunkingScheduler
+    from repro.serving.request import Request
+    sc = ChunkingScheduler(SchedulerConfig(admission="fewest-remaining"),
+                           bm)
+    mk = lambda rid, rem, t: Request(
+        rid=rid, session_id=rid, prompt_tokens=list(range(2, 40)),
+        output_script=[5, 6], arrival=t, remaining_calls=rem)
+    a, b, c = mk(0, 3, 0.0), mk(1, 1, 0.1), mk(2, None, 0.05)
+    for r in (a, b, c):
+        sc.submit(r)
+    sc.schedule(now=1.0)
+    # fewest remaining calls first; unknown (None) after known, FCFS
+    assert sc.running == [b, a, c]
+
+
+def test_fcfs_admission_unchanged():
+    fp = FreqParams.from_turning_point(10.0)
+    bm = BlockManager(256, 16, make_policy("lru", fp),
+                      analytic_cost_model(get_config("llama31-8b")), fp)
+    from repro.serving.scheduler import ChunkingScheduler
+    from repro.serving.request import Request
+    sc = ChunkingScheduler(SchedulerConfig(), bm)
+    mk = lambda rid, rem: Request(
+        rid=rid, session_id=rid, prompt_tokens=list(range(2, 40)),
+        output_script=[5], arrival=0.0, remaining_calls=rem)
+    a, b = mk(0, 3), mk(1, 1)
+    sc.submit(a), sc.submit(b)
+    sc.schedule(now=1.0)
+    assert sc.running == [a, b]
+
+
+# ---------------------------------------------------------------------------
+# resume prediction
+# ---------------------------------------------------------------------------
+
+def test_resume_predictor():
+    p = ResumePredictor(default=2.0)
+    # nothing observed: trust the announcement, or fall back to default
+    assert p.predict(1.5) == 1.5
+    assert p.predict(None) == 2.0
+    # predictable tools: zero error forever -> exact predictions
+    for _ in range(10):
+        p.observe(actual=0.8, announced=0.8)
+    assert p.predict(1.2) == 1.2
+    # tools that overrun their announcement: the quantile correction
+    # makes the prediction conservative (late enough)
+    q = ResumePredictor(percentile=0.9)
+    for _ in range(20):
+        q.observe(actual=1.3, announced=1.0)
+    assert q.predict(1.0) == pytest.approx(1.3)
+    # unannounced suspensions: quantile of observed absolute durations
+    assert q.predict(None) == pytest.approx(1.3)
+    # predictions never go negative
+    r = ResumePredictor()
+    r.observe(actual=0.1, announced=5.0)
+    assert r.predict(0.2) == 0.0
