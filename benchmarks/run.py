@@ -15,6 +15,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   Fig. 13     kernel_fusion      fused varlen dispatch vs two-dispatch
   (ours)      sharded_serving    N-way sequence-sharded engine vs single
   §6.5/§8     agentic_online     closed-loop Continuum frontend + prefetch
+  (ours)      control_plane_stress  k-step decode dispatch + 5k-session O(·)
 """
 import argparse
 import sys
@@ -38,6 +39,7 @@ MODULES = [
     # so it is insensitive to this process's jax device-count lock
     ("sharded_serving", {}),
     ("agentic_online", {}),
+    ("control_plane_stress", {}),
 ]
 
 

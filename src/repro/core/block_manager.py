@@ -35,6 +35,7 @@ Cross-request prefix sharing (radix trie + copy-on-write):
 """
 from __future__ import annotations
 
+import heapq
 import math
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -157,6 +158,18 @@ class BlockManager:
         self.n_prefetch_hits = 0        # prefetched blocks later acquired
         self.n_prefetch_misses = 0      # neither on device nor in host tier
         self.n_prefetch_alloc_fail = 0  # no device slot free to restore into
+        # ---- TTL pin expiry: a lazy min-heap of (until, slot) entries.
+        # Every positive pin goes through pin(), which pushes its current
+        # pinned_until; direct unpins (realize/cancel_prefetch) just set
+        # pinned_until and leave a stale entry behind — an entry is live
+        # iff it still equals the block's pinned_until.  unpin_expired /
+        # earliest_pin_expiry pop expired+stale entries in O(log n) each
+        # instead of scanning all num_blocks blocks per step (the 5k-
+        # session control-plane stress gate caught the O(num_blocks) scan).
+        self._pin_heap: List[Tuple[float, int]] = []
+        self.n_pin_heap_ops = 0
+        # evictable-set re-ranks forced by set_boost (§5.2 suspend boost)
+        self.n_evictor_reranks = 0
         # stats
         self.n_lookups = 0
         self.n_hits = 0
@@ -435,16 +448,27 @@ class BlockManager:
         for slot in slots:
             blk = self.blocks[slot]
             blk.pinned_until = max(blk.pinned_until, until)
+            heapq.heappush(self._pin_heap, (blk.pinned_until, slot))
+            self.n_pin_heap_ops += 1
             if blk.ref_count == 0 and blk.key is not None:
                 self.policy.remove(slot)
 
     def unpin_expired(self, now: float) -> None:
-        for blk in self.blocks:
-            if blk.pinned_until > -math.inf and now >= blk.pinned_until:
-                blk.pinned_until = -math.inf
-                if blk.ref_count == 0 and blk.key is not None and \
-                        blk.slot not in self.policy:
-                    self._make_evictable(blk.slot, now)
+        """Release every pin that has expired by ``now``.  Cost is
+        O(expired · log pins) via the lazy pin heap — NOT a scan of the
+        whole pool, which at stress-scale session counts dominated the
+        per-step control plane."""
+        heap = self._pin_heap
+        while heap and heap[0][0] <= now:
+            until, slot = heapq.heappop(heap)
+            self.n_pin_heap_ops += 1
+            blk = self.blocks[slot]
+            if blk.pinned_until != until:
+                continue               # stale: re-pinned later or unpinned
+            blk.pinned_until = -math.inf
+            if blk.ref_count == 0 and blk.key is not None and \
+                    slot not in self.policy:
+                self._make_evictable(slot, now)
 
     def swap_in(self, key: int, slot: int, block_pos: int,
                 now: float) -> bool:
@@ -597,9 +621,40 @@ class BlockManager:
         }
 
     def earliest_pin_expiry(self, now: float) -> Optional[float]:
-        times = [b.pinned_until for b in self.blocks
-                 if b.pinned_until > now]
-        return min(times) if times else None
+        """Soonest pin expiry strictly after ``now`` (lazy pin heap:
+        stale entries are dropped on the way down; entries already
+        expired by ``now`` are released exactly as unpin_expired
+        would)."""
+        heap = self._pin_heap
+        while heap:
+            until, slot = heap[0]
+            blk = self.blocks[slot]
+            if blk.pinned_until != until:
+                heapq.heappop(heap)                 # stale
+                self.n_pin_heap_ops += 1
+                continue
+            if until > now:
+                return until
+            heapq.heappop(heap)
+            self.n_pin_heap_ops += 1
+            blk.pinned_until = -math.inf
+            if blk.ref_count == 0 and blk.key is not None and \
+                    slot not in self.policy:
+                self._make_evictable(slot, now)
+        return None
+
+    def control_plane_counts(self) -> Dict[str, int]:
+        """Deterministic per-structure op counts for the control-plane
+        stress gates (benchmarks/control_plane_stress.py): divided by
+        scheduled steps, each must stay sublinear in resident sessions."""
+        from repro.core.evictor import policy_op_counts
+        out = dict(policy_op_counts(self.policy))
+        out["evictor_reranks"] = self.n_evictor_reranks
+        out["trie_nodes_visited"] = (
+            self.prefix_trie.n_nodes_visited
+            if self.prefix_trie is not None else 0)
+        out["pin_heap_ops"] = self.n_pin_heap_ops
+        return out
 
     def set_boost(self, slots: Sequence[int], boost: float) -> None:
         """Agentic correction factor (§5.2): tool-call-pending blocks.
@@ -615,6 +670,7 @@ class BlockManager:
             blk.boost = boost
             if blk.ref_count == 0 and blk.key is not None \
                     and slot in self.policy:
+                self.n_evictor_reranks += 1
                 self.policy.remove(slot)
                 self._make_evictable(slot, blk.last_access)
 

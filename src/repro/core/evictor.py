@@ -96,6 +96,11 @@ class AsymCacheEvictor(EvictionPolicy):
         self.bt2 = Treap(seed + 1)
         self._keys: Dict[int, Tuple[float, float]] = {}
         self.log_lambda = 0.0
+        # deterministic op counts (benchmarks/control_plane_stress.py):
+        # tree work itself is bt1.n_ops + bt2.n_ops
+        self.n_adds = 0
+        self.n_removes = 0
+        self.n_evicts = 0
 
     def _log_cost(self, meta: EvictableMeta) -> float:
         lc = meta.log_cost
@@ -105,6 +110,7 @@ class AsymCacheEvictor(EvictionPolicy):
 
     def add(self, block_id: int, meta: EvictableMeta) -> None:
         assert block_id not in self._keys
+        self.n_adds += 1
         lc = self._log_cost(meta)
         k1 = self.freq.key1(meta.last_access, lc)
         k2 = self.freq.key2(meta.last_access, lc)
@@ -116,11 +122,13 @@ class AsymCacheEvictor(EvictionPolicy):
         keys = self._keys.pop(block_id, None)
         if keys is None:
             return False
+        self.n_removes += 1
         self.bt1.delete(keys[0], block_id)
         self.bt2.delete(keys[1], block_id)
         return True
 
     def evict(self, now: float) -> Optional[int]:
+        self.n_evicts += 1
         m1 = self.bt1.min()
         m2 = self.bt2.min()
         if m1 is None and m2 is None:
@@ -327,3 +335,20 @@ def make_policy(name: str, freq: FreqParams, **kw) -> EvictionPolicy:
     if cls is LRUEvictor:
         return cls()
     return cls(freq, **kw)
+
+
+def policy_op_counts(policy: EvictionPolicy) -> Dict[str, int]:
+    """Deterministic control-plane op counts of a policy instance.
+
+    AsymCache exposes treap spine steps and add/remove/evict calls;
+    other policies (no instrumented structures) report zeros so the
+    stress benchmark's counter schema is policy-independent."""
+    if isinstance(policy, AsymCacheEvictor):
+        return {
+            "treap_ops": policy.bt1.n_ops + policy.bt2.n_ops,
+            "evictor_adds": policy.n_adds,
+            "evictor_removes": policy.n_removes,
+            "evictor_evicts": policy.n_evicts,
+        }
+    return {"treap_ops": 0, "evictor_adds": 0,
+            "evictor_removes": 0, "evictor_evicts": 0}

@@ -60,6 +60,9 @@ class PrefixTrie:
         self.stored_tokens = 0
         self.n_sequences = 0
         self.n_resets = 0
+        # nodes stepped through by insert/match walks — gated sublinear
+        # per scheduled step by benchmarks/control_plane_stress.py
+        self.n_nodes_visited = 0
 
     # ------------------------------------------------------------------
     def insert(self, tokens) -> None:
@@ -74,6 +77,7 @@ class PrefixTrie:
         node = self.root
         pos = 0
         while pos < len(tokens):
+            self.n_nodes_visited += 1
             child = node.children.get(tokens[pos])
             if child is None:
                 leaf = _Node(edge=tokens[pos:])
@@ -107,6 +111,7 @@ class PrefixTrie:
         pos = 0
         n = len(tokens)
         while pos < n:
+            self.n_nodes_visited += 1
             child = node.children.get(tokens[pos])
             if child is None:
                 return PrefixMatch(length=pos, node=node,

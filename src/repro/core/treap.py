@@ -36,6 +36,11 @@ class Treap:
         self._root: Optional[_Node] = None
         self._rng = random.Random(seed)
         self._size = 0
+        # spine steps across merge/split/delete/min — the per-op work a
+        # balanced tree does, O(log n) expected each.  The control-plane
+        # stress benchmark reads this (via the evictor/block manager) to
+        # gate evictor cost sublinear in resident sessions.
+        self.n_ops = 0
 
     def __len__(self) -> int:
         return self._size
@@ -60,6 +65,7 @@ class Treap:
                 cur.right = node
 
         while a is not None and b is not None:
+            self.n_ops += 1
             if a.prio > b.prio:
                 attach(a)
                 cur, attach_left = a, False
@@ -77,6 +83,7 @@ class Treap:
         right_dummy = _Node((0.0, 0), 0.0)
         lcur, rcur = left_dummy, right_dummy
         while node is not None:
+            self.n_ops += 1
             if node.key < key:
                 lcur.right = node
                 lcur = node
@@ -101,6 +108,7 @@ class Treap:
         key = (weight, uid)
         parent, cur, is_left = None, self._root, True
         while cur is not None and cur.key != key:
+            self.n_ops += 1
             parent = cur
             if key < cur.key:
                 cur, is_left = cur.left, True
@@ -123,6 +131,7 @@ class Treap:
         if cur is None:
             return None
         while cur.left is not None:
+            self.n_ops += 1
             cur = cur.left
         return cur.key
 

@@ -22,10 +22,13 @@ from repro.serving.workload import (
     AgenticConfig,
     SessionScript,
     SharedPrefixConfig,
+    StressConfig,
     TurnScript,
     WorkloadConfig,
     agentic_session_scripts,
     agentic_workload,
+    control_plane_stress_scripts,
+    decode_burst_workload,
     multi_turn_workload,
     requests_from_scripts,
     shared_prefix_workload,
@@ -38,8 +41,9 @@ __all__ = [
     "AsymCacheServer", "ScriptedSource", "ServerConfig", "reference_logits",
     "FrontendConfig", "OnlineFrontend",
     "AgentSession", "OnlineTelemetry", "SessionState",
-    "AgenticConfig", "SessionScript", "SharedPrefixConfig", "TurnScript",
-    "WorkloadConfig", "agentic_session_scripts", "agentic_workload",
-    "multi_turn_workload", "requests_from_scripts",
+    "AgenticConfig", "SessionScript", "SharedPrefixConfig", "StressConfig",
+    "TurnScript", "WorkloadConfig", "agentic_session_scripts",
+    "agentic_workload", "control_plane_stress_scripts",
+    "decode_burst_workload", "multi_turn_workload", "requests_from_scripts",
     "shared_prefix_workload",
 ]

@@ -241,7 +241,7 @@ class Engine:
         self.windows = [int(w) for w in np.asarray(_layer_windows(cfg, L))]
         self._step = jax.jit(
             self._step_impl,
-            static_argnums=(4, 5, 6),
+            static_argnums=(4, 5, 6, 7),
             donate_argnums=(1, 2) if ecfg.donate_pools else (),
             **({"in_shardings": in_shardings}
                if in_shardings is not None else {}))
@@ -302,17 +302,34 @@ class Engine:
         self.eager_copies = 0
         self.instep_swaps = 0
         self.eager_swaps = 0
+        # multi-token decode dispatch + decode-phase accounting
+        # (benchmarks/control_plane_stress.py gates the ≥3x dispatch
+        # drop on decode-dominated segments with these)
+        self.decode_only_dispatches = 0    # dispatches with no prefill chunk
+        self.decode_tokens_emitted = 0     # decode tokens across iterations
+        self.multi_token_dispatches = 0    # dispatches with k > 1
+        self.multi_token_iterations = 0    # sum of k over those
+        self.multi_token_rollbacks = 0     # masked (unconsumed) iterations
+        self.k_counts: Dict[int, int] = {}
         # packed-input layouts (vectorized assembly): every int32 input in
         # one flat host buffer -> ONE device_put per step instead of ~14;
-        # one layout per (t_bucket, np_bucket, w_bucket)
-        self._layouts: Dict[Tuple[int, int, int],
+        # one layout per (t_bucket, np_bucket, w_bucket, n_iter)
+        self._layouts: Dict[Tuple[int, int, int, int],
                             Tuple[List[Tuple[str, int, int]], int]] = {}
 
     # ------------------------------------------------------------------
-    def pack_layout(self, t_bucket: int, np_bucket: int, w_bucket: int):
+    def pack_layout(self, t_bucket: int, np_bucket: int, w_bucket: int,
+                    n_iter: int = 1):
         """(name, offset, size) triples of the flat int32 pack buffer for
-        one occupancy bucket (cached; trace-time and assembly agree)."""
-        key = (t_bucket, np_bucket, w_bucket)
+        one occupancy bucket (cached; trace-time and assembly agree).
+
+        Multi-token decode plans (``n_iter > 1``, fused layout only)
+        carry PER-ITERATION copies of the fields that change between the
+        fused decode iterations (tokens/positions/valid/write coords/
+        ctx/qlen and the Pallas work-list); the sequence-row structure
+        (seq_ids/sel/qstart/bt) and the page-op queues are shared.  The
+        ``n_iter == 1`` layout is byte-identical to the single-step one."""
+        key = (t_bucket, np_bucket, w_bucket, n_iter)
         cached = self._layouts.get(key)
         if cached is not None:
             return cached
@@ -323,12 +340,13 @@ class Engine:
         C = self.n_shards * e.max_instep_copies
         S = self.n_shards * e.max_instep_swaps
         if e.attn_mode == "fused":
-            t, n = t_bucket, self.n_seqs
-            fields = [("tokens", t), ("positions", t), ("valid", t),
-                      ("write_slot", t), ("write_off", t), ("seq_ids", t),
-                      ("sel", R + B), ("qstart", n), ("qlen", n),
-                      ("ctx", n), ("bt", n * np_bucket)]
-            fields += [(f, w_bucket) for f in WL_FIELDS]
+            t, n, k = t_bucket, self.n_seqs, n_iter
+            fields = [("tokens", k * t), ("positions", k * t),
+                      ("valid", k * t), ("write_slot", k * t),
+                      ("write_off", k * t), ("seq_ids", t),
+                      ("sel", R + B), ("qstart", n), ("qlen", k * n),
+                      ("ctx", k * n), ("bt", n * np_bucket)]
+            fields += [(f, k * w_bucket) for f in WL_FIELDS]
             fields += [("copy_src", C), ("copy_dst", C), ("swap_dst", S)]
         else:
             t, NP = self.t_max, e.max_blocks_per_seq
@@ -365,7 +383,10 @@ class Engine:
         for c in plan.prefills:
             need_p = max(need_p, -(-(int(c.positions[-1]) + 1) // bs))
         for req in plan.decodes:
-            ctx = req.prompt_len + len(req.generated)
+            # a k-step plan's last iteration reads k-1 positions past the
+            # current context — the page bucket must cover it
+            ctx = req.prompt_len + len(req.generated) \
+                + plan.decode_steps - 1
             need_p = max(need_p, -(-ctx // bs))
         need_p = min(need_p, self.ecfg.max_blocks_per_seq)
         nb = plan.np_bucket
@@ -377,12 +398,13 @@ class Engine:
 
     # ------------------------------------------------------------------
     def _step_impl(self, params, k_pools, v_pools, inp,
-                   t_bucket: int, np_bucket: int, w_bucket: int):
+                   t_bucket: int, np_bucket: int, w_bucket: int,
+                   n_iter: int = 1):
         self.jit_traces += 1           # side effect at trace time only
         cfg, e = self.cfg, self.ecfg
         if e.assembly != "legacy":
             # trace-time slicing of the pack into named views
-            inp = self._unpack(inp, t_bucket, np_bucket, w_bucket)
+            inp = self._unpack(inp, t_bucket, np_bucket, w_bucket, n_iter)
         R, QP, B = e.max_prefills, e.max_chunk, e.max_decodes
         fused = e.attn_mode == "fused"
 
@@ -401,6 +423,13 @@ class Engine:
                 inp["swap_v"])
             k_pools, v_pools = apply_page_copies(
                 k_pools, v_pools, inp["copy_src"], inp["copy_dst"])
+
+        if n_iter > 1:
+            # multi-token decode dispatch: k fused decode iterations
+            # inside this one jitted call (single-device fused layout
+            # only — build_inputs enforces it)
+            return self._multi_decode_steps(
+                params, k_pools, v_pools, inp, t_bucket, n_iter)
 
         x = params["embed"][inp["tokens"]]          # (T, d)
         pos = inp["positions"]
@@ -492,6 +521,80 @@ class Engine:
             y = swiglu_mlp(h2, blk["w1"], blk["w3"], blk["w2"])
         return x + y
 
+    def _fused_pass(self, params, k_pools, v_pools, tokens, pos, valid,
+                    write_slot, write_off, ctx, bt, qstart, qlen, seq_ids,
+                    worklist, t_bucket: int):
+        """One fused single-device forward over a varlen token stream:
+        per-layer KV page write + ONE ``msa_fused`` dispatch each — the
+        body a multi-token decode iteration repeats, op-for-op the same
+        math as the ``n_iter == 1`` fused branch of ``_step_impl`` (the
+        k-vs-1 byte-identity the benchmarks gate depends on it).
+        Returns the updated pools and the pre-final-norm residual."""
+        cfg, e = self.cfg, self.ecfg
+        tq = min(e.q_tile, t_bucket)
+        x = params["embed"][tokens]
+        for l in range(cfg.n_layers):
+            blk = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
+            window = self.windows[l]
+            h = rms_norm(x, blk["attn_norm"], cfg.norm_eps)
+            q = jnp.einsum("td,dhk->thk", h, blk["wq"])
+            k_new = jnp.einsum("td,dhk->thk", h, blk["wk"])
+            v_new = jnp.einsum("td,dhk->thk", h, blk["wv"])
+            if cfg.rope_theta > 0:
+                q = apply_rope(q, pos, cfg.rope_theta)
+                k_new = apply_rope(k_new, pos, cfg.rope_theta)
+            kp, vp = write_kv_pages(k_pools[l], v_pools[l], k_new, v_new,
+                                    write_slot, write_off, valid)
+            k_pools = k_pools.at[l].set(kp)
+            v_pools = v_pools.at[l].set(vp)
+            attn = msa_fused(q, kp, vp, bt, ctx, pos, seq_ids, valid,
+                             q_start=qstart, q_len=qlen, worklist=worklist,
+                             window=window, softcap=cfg.attn_logit_softcap,
+                             q_tile=tq, impl=e.attn_impl)
+            x = x + jnp.einsum("thk,hkd->td", attn, blk["wo"])
+            x = self._mlp_sublayer(x, blk)
+        return k_pools, v_pools, x
+
+    def _multi_decode_steps(self, params, k_pools, v_pools, inp,
+                            t_bucket: int, n_iter: int):
+        """k sequential fused decode iterations inside ONE jitted call
+        (trace-time Python loop → one XLA program, one host dispatch).
+
+        Each iteration's input token is the host-forced id when ≥ 0, else
+        (sentinel -1) the previous iteration's device-side greedy sample
+        for that row — device sampling feeding the next token without
+        leaving the device.  The scripted serving loop always forces, so
+        runs stay teacher-forced and byte-comparable to k=1.  Iterations
+        at or past a request's ``decode_iters`` are masked out on device
+        (valid 0: no KV write; qlen 0: no attention row) and their
+        sampled ids are rolled back on the host by never being consumed."""
+        cfg, e = self.cfg, self.ecfg
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        seq_ids = inp["seq_ids"]
+        ids_steps = []
+        prev = logits = None
+        for i in range(n_iter):
+            tok = inp["tokens"][i]
+            if prev is not None:
+                tok = jnp.where(tok >= 0, tok, prev[seq_ids])
+            k_pools, v_pools, x = self._fused_pass(
+                params, k_pools, v_pools, jnp.maximum(tok, 0),
+                inp["positions"][i], inp["valid"][i],
+                inp["write_slot"][i], inp["write_off"][i], inp["ctx"][i],
+                inp["bt"], inp["qstart"], inp["qlen"][i], seq_ids,
+                None if e.attn_impl == "xla"
+                else tuple(inp[f][i] for f in WL_FIELDS),
+                t_bucket)
+            x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+            logits = x[inp["sel"]] @ head            # (R+B, V)
+            ids = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            ids_steps.append(ids)
+            prev = ids
+        token_ids = jnp.stack(ids_steps)             # (n_iter, R+B)
+        out_logits = (logits if e.return_full_logits
+                      else logits[:e.max_prefills])
+        return token_ids, out_logits, k_pools, v_pools
+
     # ------------------------------------------------------------------
     def build_inputs(self, plan: StepPlan):
         """Host-side assembly of the padded device arrays for one step.
@@ -504,6 +607,12 @@ class Engine:
         the legacy path cost more host time per step than the arrays
         they move."""
         t_b, np_b = self.buckets_for(plan)
+        n_it = plan.decode_steps
+        if n_it > 1 and (self.ecfg.attn_mode != "fused"
+                         or self.n_shards > 1
+                         or self.ecfg.assembly == "legacy"):
+            raise ValueError("multi-token decode dispatch requires the "
+                             "fused single-device vectorized layout")
         if self.ecfg.assembly == "legacy":
             out = self._assemble_legacy(plan)
             out.update(self._fold_page_ops())
@@ -511,32 +620,46 @@ class Engine:
                     (t_b, np_b, 0))
         fused = self.ecfg.attn_mode == "fused"
         w_b = 0
-        fields = wl = None
+        fields = wls = None
         if fused:
             # one derivation of the varlen metadata feeds BOTH the packed
             # buffer and (Pallas impls) the work-list builder
-            fields = self._assemble_fused(plan, t_b, np_b)
+            if n_it > 1:
+                fields = self._assemble_fused_multi(plan, t_b, np_b, n_it)
+            else:
+                fields = self._assemble_fused(plan, t_b, np_b)
             if self.ecfg.attn_impl != "xla":
+                # one work-list per fused iteration (n_it == 1: exactly
+                # the single-step list), all padded to one shared W so
+                # the bucket key stays (t, np, w, k)
                 tq = min(self.ecfg.q_tile, t_b)
-                wl, _ = build_worklist(
-                    fields["qstart"], fields["qlen"], fields["ctx"],
-                    fields["bt"], fields["positions"],
-                    page=self.ecfg.page_size, q_tile=tq,
-                    n_tiles=-(-t_b // tq), window=0)
+                per_it = (lambda a, i: a[i] if n_it > 1 else a)
+                wls = []
+                for i in range(n_it):
+                    wl, _ = build_worklist(
+                        fields["qstart"], per_it(fields["qlen"], i),
+                        per_it(fields["ctx"], i), fields["bt"],
+                        per_it(fields["positions"], i),
+                        page=self.ecfg.page_size, q_tile=tq,
+                        n_tiles=-(-t_b // tq), window=0)
+                    wls.append(wl)
                 # power-of-two W buckets keep the per-W jit variants at
                 # most log2(Wmax) many
-                w_b = max(WL_BUCKET,
-                          1 << (wl["wl_seq"].shape[0] - 1).bit_length())
-                wl = pad_worklist(wl, w_b, sentinel_seq=self.n_seqs)
-        layout, size = self.pack_layout(t_b, np_b, w_b)
+                w_b = max(WL_BUCKET, 1 << (max(
+                    wl["wl_seq"].shape[0] for wl in wls) - 1).bit_length())
+                wls = [pad_worklist(wl, w_b, sentinel_seq=self.n_seqs)
+                       for wl in wls]
+        layout, size = self.pack_layout(t_b, np_b, w_b, n_it)
         buf = np.zeros((size,), np.int32)
         views = {name: buf[off:off + size_] for name, off, size_ in layout}
         if fused:
             for name, arr in fields.items():
                 views[name][:] = arr.reshape(-1)
-            if wl is not None:
+            if wls is not None:
                 for f in WL_FIELDS:
-                    views[f][:] = wl[f]
+                    dst = views[f].reshape(n_it, w_b)
+                    for i, wl in enumerate(wls):
+                        dst[i] = wl[f]
         else:
             self._assemble_vectorized(plan, views)
         ops = self._fold_page_ops(views)
@@ -546,12 +669,13 @@ class Engine:
                 (t_b, np_b, w_b))
 
     def _unpack(self, inp: Dict[str, jax.Array], t_bucket: int,
-                np_bucket: int, w_bucket: int) -> Dict[str, jax.Array]:
+                np_bucket: int, w_bucket: int,
+                n_iter: int = 1) -> Dict[str, jax.Array]:
         """Static slices of the packed buffer back into named step inputs
         (trace-time only — compiles to views of the one transferred
         buffer)."""
         e = self.ecfg
-        layout, _ = self.pack_layout(t_bucket, np_bucket, w_bucket)
+        layout, _ = self.pack_layout(t_bucket, np_bucket, w_bucket, n_iter)
         buf = inp["pack"]
         out = {name: buf[off:off + size] for name, off, size in layout}
         out["valid"] = out["valid"].astype(bool)
@@ -562,6 +686,16 @@ class Engine:
             out["swap_dst"] = out["swap_dst"].reshape(ns, e.max_instep_swaps)
         if e.attn_mode == "fused":
             out["bt"] = out["bt"].reshape(self.n_seqs, np_bucket)
+            if n_iter > 1:
+                # per-iteration fields fold out to (k, ·)
+                for f in ("tokens", "positions", "valid",
+                          "write_slot", "write_off"):
+                    out[f] = out[f].reshape(n_iter, t_bucket)
+                out["qlen"] = out["qlen"].reshape(n_iter, self.n_seqs)
+                out["ctx"] = out["ctx"].reshape(n_iter, self.n_seqs)
+                if w_bucket:
+                    for f in WL_FIELDS:
+                        out[f] = out[f].reshape(n_iter, w_bucket)
         else:
             R, B, NP = e.max_prefills, e.max_decodes, e.max_blocks_per_seq
             out["bt_pre"] = out["bt_pre"].reshape(R, NP)
@@ -643,6 +777,71 @@ class Engine:
             sel[R:R + nd] = rows
             off += nd
         assert off <= t_bucket, (off, t_bucket)
+        return dict(tokens=tokens, positions=positions, valid=valid,
+                    write_slot=write_slot, write_off=write_off,
+                    seq_ids=seq_ids, sel=sel, qstart=qstart, qlen=qlen,
+                    ctx=ctx, bt=bt)
+
+    def _assemble_fused_multi(self, plan: StepPlan, t_bucket: int,
+                              np_bucket: int,
+                              k: int) -> Dict[str, np.ndarray]:
+        """Per-iteration varlen assembly of a decode-only multi-token
+        plan (``decode_steps == k > 1``).
+
+        Iteration ``i`` of decode row ``j`` feeds the teacher-forced
+        token at logical position ``p0_j + i`` — the id iteration ``i-1``
+        emits under forcing (``output_script[gen-1+i]``; a -1 here would
+        select the previous iteration's device-side sample instead) —
+        and writes that position's KV page.  Iterations at or past
+        ``decode_iters[j]`` (request out of scripted output) are masked
+        out entirely: valid 0 (no KV write), qlen 0 (no attention row);
+        the device still computes the row's logits, garbage the host
+        rolls back by never consuming them."""
+        e = self.ecfg
+        bs = e.page_size
+        R, B = e.max_prefills, e.max_decodes
+        t, n = t_bucket, self.n_seqs
+        nd = len(plan.decodes)
+        assert not plan.prefills and 0 < nd <= B
+        iters = np.asarray(plan.decode_iters, np.int32)
+        assert iters.shape == (nd,) and int(iters.max()) == k
+
+        tokens = np.zeros((k, t), np.int32)
+        positions = np.zeros((k, t), np.int32)
+        valid = np.zeros((k, t), np.int32)
+        write_slot = np.zeros((k, t), np.int32)
+        write_off = np.zeros((k, t), np.int32)
+        seq_ids = np.zeros((t,), np.int32)
+        sel = np.zeros((R + B,), np.int32)
+        qstart = np.zeros((n,), np.int32)
+        qlen = np.zeros((k, n), np.int32)
+        ctx = np.zeros((k, n), np.int32)
+        bt = np.zeros((n, np_bucket), np.int32)
+
+        rows = np.arange(nd, dtype=np.int32)
+        p0 = np.fromiter((req.prompt_len + len(req.generated) - 1
+                          for req in plan.decodes), np.int32, nd)
+        gen = np.fromiter((len(req.generated) for req in plan.decodes),
+                          np.int32, nd)
+        seq_ids[:nd] = R + rows
+        qstart[R:R + nd] = rows
+        sel[R:R + nd] = rows
+        for j, req in enumerate(plan.decodes):
+            slots = req.slot_array()
+            m = min(np_bucket, slots.shape[0])
+            bt[R + j, :m] = slots[:m]
+        for i in range(k):
+            act = i < iters                 # (nd,) live this iteration
+            p = p0 + i
+            positions[i, :nd] = np.where(act, p, 0)
+            valid[i, :nd] = act
+            qlen[i, R:R + nd] = act
+            ctx[i, R:R + nd] = np.where(act, p + 1, 0)
+            write_off[i, :nd] = np.where(act, p % bs, 0)
+            for j, req in enumerate(plan.decodes):
+                if act[j]:
+                    tokens[i, j] = req.output_script[gen[j] - 1 + i]
+                    write_slot[i, j] = req.slot_array()[p[j] // bs]
         return dict(tokens=tokens, positions=positions, valid=valid,
                     write_slot=write_slot, write_off=write_off,
                     seq_ids=seq_ids, sel=sel, qstart=qstart, qlen=qlen,
@@ -996,7 +1195,37 @@ class Engine:
             "eager_copies": self.eager_copies,
             "instep_swaps": self.instep_swaps,
             "eager_swaps": self.eager_swaps,
+            # multi-token decode dispatch (schema frozen by
+            # tests/test_perf_counters.py — benchmark gates read these)
+            "engine_dispatches": self.steps_executed,
+            "decode_only_dispatches": self.decode_only_dispatches,
+            "decode_tokens_emitted": self.decode_tokens_emitted,
+            "multi_token_dispatches": self.multi_token_dispatches,
+            "multi_token_iterations": self.multi_token_iterations,
+            "multi_token_rollbacks": self.multi_token_rollbacks,
+            "k_counts": {f"k{k}": c for k, c
+                         in sorted(self.k_counts.items())},
         }
+
+    def reset_perf_counters(self) -> None:
+        """Zero the deterministic accounting so a benchmark can measure
+        one phase of a run in isolation (e.g. the decode-dominated
+        segment the multi-token gates slice out).  The jit-cache state —
+        ``jit_traces`` and ``buckets_used`` — is NOT reset: the
+        compile-once-per-bucket invariant spans the engine's lifetime."""
+        self.steps_executed = 0
+        self.attn_dispatches = 0
+        self.valid_token_rows = 0
+        self.total_token_rows = 0
+        self.bucket_counts = {}
+        self.instep_copies = self.eager_copies = 0
+        self.instep_swaps = self.eager_swaps = 0
+        self.decode_only_dispatches = 0
+        self.decode_tokens_emitted = 0
+        self.multi_token_dispatches = 0
+        self.multi_token_iterations = 0
+        self.multi_token_rollbacks = 0
+        self.k_counts = {}
 
     def collective_counts(self, t_bucket: Optional[int] = None,
                           np_bucket: Optional[int] = None) -> Dict[str, int]:
@@ -1017,7 +1246,7 @@ class Engine:
             # counter must keep meaning "compiled step variants executed"
             compiled = self._step.lower(self.params, self.k_pools,
                                         self.v_pools, inp, t_b, np_b,
-                                        0).compile()
+                                        0, 1).compile()
         finally:
             self.jit_traces = traces
         coll = parse_collectives(compiled.as_text())
@@ -1032,18 +1261,29 @@ class Engine:
         subsequent ``dispatch`` is ordered after this step by data
         dependency — the basis of the one-step-deep pipeline."""
         t0 = time.perf_counter()
+        k = plan.decode_steps
         inp, (t_b, np_b, w_b) = self.build_inputs(plan)
         t_asm = time.perf_counter() - t0
         token_ids, pre_logits, self.k_pools, self.v_pools = self._step(
-            self.params, self.k_pools, self.v_pools, inp, t_b, np_b, w_b)
+            self.params, self.k_pools, self.v_pools, inp, t_b, np_b, w_b, k)
         self.steps_executed += 1
-        self.buckets_used.add((t_b, np_b, w_b))
+        self.buckets_used.add((t_b, np_b, w_b, k))
         fused = self.ecfg.attn_mode == "fused"
-        self.attn_dispatches += self.cfg.n_layers * (1 if fused else 2)
-        self.valid_token_rows += plan.n_compute_tokens
-        self.total_token_rows += t_b if fused else self.t_max
+        self.attn_dispatches += self.cfg.n_layers * (k if fused else 2)
+        emitted = plan.emitted_tokens
+        self.valid_token_rows += emitted
+        self.total_token_rows += t_b * k if fused else self.t_max
         key = (t_b, np_b)
         self.bucket_counts[key] = self.bucket_counts.get(key, 0) + 1
+        if plan.decodes and not plan.prefills:
+            self.decode_only_dispatches += 1
+            self.decode_tokens_emitted += emitted
+        if k > 1:
+            self.multi_token_dispatches += 1
+            self.multi_token_iterations += k
+            self.multi_token_rollbacks += \
+                k * len(plan.decodes) - sum(plan.decode_iters)
+            self.k_counts[k] = self.k_counts.get(k, 0) + 1
         return StepHandle(token_ids=token_ids, prefill_logits=pre_logits,
                           assembly_time=t_asm,
                           full_logits=self.ecfg.return_full_logits)

@@ -97,6 +97,9 @@ class OnlineFrontend:
         self._heap: List[Tuple[float, int, str, AgentSession, int]] = []
         self._seq = 0
         self._next_rid = 0
+        # event-heap pushes+pops — per scheduled step this must stay
+        # sublinear in sessions (benchmarks/control_plane_stress.py)
+        self.heap_ops = 0
         for s in self.sessions:
             self._push(s.script.arrival, "arrival", s)
 
@@ -105,11 +108,13 @@ class OnlineFrontend:
               turn: int = -1) -> None:
         heapq.heappush(self._heap, (when, self._seq, kind, sess, turn))
         self._seq += 1
+        self.heap_ops += 1
 
     def _prune(self) -> None:
         while self._heap and self._heap[0][3].state in (
                 SessionState.FINISHED, SessionState.CANCELLED):
             heapq.heappop(self._heap)
+            self.heap_ops += 1
 
     def _pf_due(self, sess: AgentSession, turn: int) -> bool:
         """A prefetch event is live only for the suspension it was
@@ -127,6 +132,7 @@ class OnlineFrontend:
         out: List[Request] = []
         while self._heap and self._heap[0][0] <= now:
             when, _, kind, sess, turn = heapq.heappop(self._heap)
+            self.heap_ops += 1
             if sess.state in (SessionState.FINISHED, SessionState.CANCELLED):
                 continue
             if kind == "prefetch":
@@ -223,4 +229,5 @@ class OnlineFrontend:
             self.server.uses_pins = prev_pins
         res.update(self.telemetry.summary())
         res["closed_loop"] = True
+        res["frontend_heap_ops"] = self.heap_ops
         return res

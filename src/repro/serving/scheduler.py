@@ -40,10 +40,36 @@ class StepPlan:
     # deepest page table.  None = engine picks (identical lattice).
     t_bucket: Optional[int] = None
     np_bucket: Optional[int] = None
+    # multi-token decode dispatch: how many fused decode iterations the
+    # engine runs inside ONE jitted call (1 = the ordinary single-step
+    # plan).  Only ever > 1 for decode-only plans (no prefill chunks).
+    decode_steps: int = 1
+    # per decode request: iterations it actually consumes inside a
+    # decode_steps > 1 plan — min(decode_steps, remaining output tokens).
+    # Iterations past a request's remaining output are masked on device
+    # (no KV write) and rolled back on the host (their sampled ids are
+    # simply never consumed).  Empty when decode_steps == 1.
+    decode_iters: List[int] = field(default_factory=list)
 
     @property
     def n_compute_tokens(self) -> int:
+        """Compute tokens per engine ITERATION (the token-stream width the
+        t_bucket must cover — not multiplied by decode_steps)."""
         return sum(len(c.positions) for c in self.prefills) + len(self.decodes)
+
+    @property
+    def total_tokens(self) -> int:
+        """Per-iteration token-stream width (alias of n_compute_tokens;
+        always ≤ the selected t_bucket)."""
+        return self.n_compute_tokens
+
+    @property
+    def emitted_tokens(self) -> int:
+        """Tokens this plan actually emits across all fused iterations."""
+        if self.decode_steps > 1:
+            return sum(len(c.positions) for c in self.prefills) \
+                + sum(self.decode_iters)
+        return self.n_compute_tokens
 
     def empty(self) -> bool:
         return not self.prefills and not self.decodes
@@ -69,6 +95,15 @@ class SchedulerConfig:
     #                        keep FCFS order among themselves, after those
     #                        that have it
     admission: str = "fcfs"
+    # multi-token decode dispatch: on a decode-dominated step (no prefill
+    # chunks, every running request decoding, no queued page ops) the
+    # scheduler may fuse up to this many decode iterations into ONE
+    # jitted engine call, amortizing the whole per-step control plane
+    # (schedule + assemble + dispatch) k-fold.  1 = off (default; the
+    # engine's single-step behaviour and counters are unchanged).  The
+    # emitted k is floored to a power of two so the k-extended bucket
+    # lattice stays small (jit variants ≤ log2(max_decode_steps) extra).
+    max_decode_steps: int = 1
     # occupancy bucket lattices (wired from the engine by the server so
     # both sides agree; empty = scheduler leaves the choice to the
     # engine).  The §5.1 chunk decision above determines a step's token
@@ -84,6 +119,12 @@ class ChunkingScheduler:
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.swaps_this_round = 0
+        # multi-token gating hook: the server points this at the engine's
+        # pending page-op queues — a queued COW copy or host-tier swap-in
+        # must land in an ordinary k=1 step (the op indices target the
+        # pool state at ONE step boundary, not k of them), so k-step
+        # plans are only emitted when every queue is empty.
+        self.pending_ops_fn = None
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -243,20 +284,29 @@ class ChunkingScheduler:
         # session's remaining tool calls (job-level shortest-remaining-
         # first) — re-sorting per round keeps the rank current as sessions
         # progress, and the (arrival, rid) tie-break keeps it deterministic
-        still_waiting = []
-        waiting = self.waiting
-        if c.admission == "fewest-remaining" and len(waiting) > 1:
-            waiting = sorted(
-                waiting, key=lambda r: (
-                    r.remaining_calls if r.remaining_calls is not None
-                    else (1 << 30), r.arrival, r.rid))
-        for req in waiting:
-            if (req.arrival <= now and len(self.running) < c.max_running
-                    and self._admit(req, now)):
-                self.running.append(req)
-            else:
-                still_waiting.append(req)
-        self.waiting = still_waiting
+        # saturated fast path: with max_running live requests no admission
+        # can succeed, so skip the O(waiting) scan (and the
+        # fewest-remaining re-sort) entirely — at thousands of queued
+        # sessions the per-step admission cost must track admissions
+        # made, not sessions resident (benchmarks/control_plane_stress.py
+        # gates this).
+        if len(self.running) < c.max_running and self.waiting:
+            still_waiting = []
+            waiting = self.waiting
+            if c.admission == "fewest-remaining" and len(waiting) > 1:
+                waiting = sorted(
+                    waiting, key=lambda r: (
+                        r.remaining_calls if r.remaining_calls is not None
+                        else (1 << 30), r.arrival, r.rid))
+            for i, req in enumerate(waiting):
+                if len(self.running) >= c.max_running:
+                    still_waiting.extend(waiting[i:])
+                    break
+                if req.arrival <= now and self._admit(req, now):
+                    self.running.append(req)
+                else:
+                    still_waiting.append(req)
+            self.waiting = still_waiting
 
         # 2. decodes first (memory-bound, latency-critical)
         decodes = [r for r in self.running if r.state == RequestState.DECODE]
@@ -282,8 +332,45 @@ class ChunkingScheduler:
                 req=req, positions=want,
                 completes_prefill=req.prefill_done))
 
+        self._select_decode_steps(plan)
         self._select_buckets(plan)
         return plan
+
+    def _select_decode_steps(self, plan: StepPlan) -> None:
+        """Multi-token decode dispatch (§5.1 decode-dominated detection).
+
+        A step is decode-dominated when the chunk decision produced no
+        prefill chunk AND every running request is decoding — i.e. no
+        prefill work is admissible at all, so the next k steps are known
+        to be pure decode.  Fusing k decode iterations into one jitted
+        call then amortizes the whole per-step control plane; k is capped
+        by ``max_decode_steps``, bounded by the longest remaining output
+        (no point tracing a k nothing can consume), and floored to a
+        power of two so the k-extended jit lattice stays small.
+
+        k stays 1 whenever any page op is queued (block-manager COW
+        copies or the engine's pending copy/swap queues via
+        ``pending_ops_fn``): queued ops fold into the next step against
+        ONE step boundary's pool state, and a request with a pending
+        swap-in or fork must never ride a k-step plan."""
+        c = self.cfg
+        if (c.max_decode_steps <= 1 or plan.prefills or not plan.decodes):
+            return
+        if any(r.state is not RequestState.DECODE for r in self.running):
+            return                         # prefill work still admissible
+        if self.bm.pending_copies or (
+                self.pending_ops_fn is not None and self.pending_ops_fn()):
+            return
+        rem = max(len(r.output_script) - len(r.generated)
+                  for r in plan.decodes)
+        k = max(1, min(c.max_decode_steps, rem))
+        k = 1 << (k.bit_length() - 1)      # floor to a power of two
+        if k <= 1:
+            return
+        plan.decode_steps = k
+        plan.decode_iters = [
+            min(k, len(r.output_script) - len(r.generated))
+            for r in plan.decodes]
 
     def _select_buckets(self, plan: StepPlan) -> None:
         """Occupancy bucket selection (fused engine layout): smallest
@@ -300,7 +387,10 @@ class ChunkingScheduler:
             for ch in plan.prefills:
                 need = max(need, -(-(int(ch.positions[-1]) + 1) // bs))
             for req in plan.decodes:
-                ctx = req.prompt_len + len(req.generated)
+                # a k-step plan's last iteration reads k-1 positions past
+                # the current context — the page bucket must cover it
+                ctx = req.prompt_len + len(req.generated) \
+                    + plan.decode_steps - 1
                 need = max(need, -(-ctx // bs))
             plan.np_bucket = next((b for b in c.page_buckets if b >= need),
                                   c.page_buckets[-1])

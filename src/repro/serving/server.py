@@ -58,16 +58,46 @@ class _SimEngine:
         r, b = sched_cfg.max_prefills, sched_cfg.max_decodes
         self._ids = np.zeros((r + b,), np.int32)
         self._logits = np.zeros((r, 1), np.float32)
+        # same dispatch accounting the real engine keeps, so the stress
+        # benchmark's simulated runs can gate the multi-token dispatch
+        # drop on identical counter names
+        self.decode_only_dispatches = 0
+        self.decode_tokens_emitted = 0
+        self.multi_token_dispatches = 0
+        self.multi_token_iterations = 0
+        self.multi_token_rollbacks = 0
+        self.k_counts: Dict[int, int] = {}
 
     def queue_copies(self, pairs) -> None:
         pass
 
     def perf_counters(self) -> Dict:
-        return {}
+        return {
+            "engine_dispatches": self.steps_executed,
+            "decode_only_dispatches": self.decode_only_dispatches,
+            "decode_tokens_emitted": self.decode_tokens_emitted,
+            "multi_token_dispatches": self.multi_token_dispatches,
+            "multi_token_iterations": self.multi_token_iterations,
+            "multi_token_rollbacks": self.multi_token_rollbacks,
+            "k_counts": {f"k{k}": c for k, c
+                         in sorted(self.k_counts.items())},
+        }
 
     def dispatch(self, plan: StepPlan) -> StepHandle:
         self.steps_executed += 1
-        return StepHandle(token_ids=self._ids, prefill_logits=self._logits)
+        k = plan.decode_steps
+        if plan.decodes and not plan.prefills:
+            self.decode_only_dispatches += 1
+            self.decode_tokens_emitted += plan.emitted_tokens
+        ids = self._ids
+        if k > 1:
+            ids = np.zeros((k, self._ids.shape[0]), np.int32)
+            self.multi_token_dispatches += 1
+            self.multi_token_iterations += k
+            self.multi_token_rollbacks += \
+                k * len(plan.decodes) - sum(plan.decode_iters)
+            self.k_counts[k] = self.k_counts.get(k, 0) + 1
+        return StepHandle(token_ids=ids, prefill_logits=self._logits)
 
 
 class ScriptedSource:
@@ -182,6 +212,15 @@ class AsymCacheServer:
             # §5.1 chunk decision — both sides must share one lattice
             self.sched.cfg.token_buckets = self.engine.token_buckets
             self.sched.cfg.page_buckets = self.engine.np_buckets
+            # multi-token decode dispatch is a fused single-device
+            # vectorized-assembly path; other layouts force k = 1
+            if (scfg.n_shards > 1 or ecfg.attn_mode != "fused"
+                    or ecfg.assembly == "legacy"):
+                scfg.scheduler.max_decode_steps = 1
+            # a queued COW copy / host-tier swap-in targets ONE step
+            # boundary's pool state — k-step plans wait for empty queues
+            self.sched.pending_ops_fn = lambda: bool(
+                self.engine._pending_copies or self.engine._pending_swaps)
             if scfg.host_blocks > 0:
                 self.bm.swap_out_fn = lambda slot: self.engine.swap_out(slot)
                 self.bm.swap_in_fn = lambda slot, pl: \
@@ -244,9 +283,16 @@ class AsymCacheServer:
         for c in plan.prefills:
             pos_sum = int(np.minimum(c.positions, w).sum())
             lat += k2 * len(c.positions) + k5 * pos_sum
-        for r in plan.decodes:
+        iters = plan.decode_iters if plan.decode_steps > 1 else None
+        for j, r in enumerate(plan.decodes):
             ctx = r.prompt_len + len(r.generated)
-            lat += k2 + k6 * min(ctx, w)
+            # a k-step plan emits each request's decode_iters tokens in
+            # this ONE dispatch: every token still pays its per-token
+            # compute, but β (the fixed per-dispatch overhead) is paid
+            # once — the model-clock form of the control-plane
+            # amortization multi-token dispatch buys
+            for i in range(iters[j] if iters else 1):
+                lat += k2 + k6 * min(ctx + i, w)
         if self.sched.swaps_this_round:
             blk_bytes = (2 * self.cfg.n_layers * self.scfg.block_size
                          * max(self.cfg.n_kv_heads, 1) * self.cfg.head_dim * 2)
@@ -364,6 +410,10 @@ class AsymCacheServer:
             "sim_time": self.now,
         })
         out.update(self.bm.prefetch_counters())
+        # per-structure control-plane op counts (treap rotations, trie
+        # walks, evictor re-ranks) — the stress benchmark divides these
+        # by `steps` and gates them sublinear in resident sessions
+        out.update(self.bm.control_plane_counts())
         if self.bm.n_shards > 1:
             # deterministic shard accounting (benchmarks/sharded_serving)
             out["n_shards"] = self.bm.n_shards
@@ -407,17 +457,24 @@ class AsymCacheServer:
                 if req.state is RequestState.DECODE \
                         and len(req.output_script) <= 1:
                     self._finish(req)
-        for req in plan.decodes:
-            if req.state is not RequestState.DECODE:
-                continue               # cancelled (or already finished)
-            p = req.prompt_len + len(req.generated) - 1
-            if (p + 1) % self.scfg.block_size == 0:
-                self._commit_ready_blocks(req, p + 1)
-            req.generated.append(int(req.output_script[len(req.generated)]))
-            if req.on_token is not None:
-                req.on_token(req, req.generated[-1])
-            if req.state is RequestState.DECODE and req.decode_done:
-                self._finish(req)
+        iters = plan.decode_iters if plan.decode_steps > 1 else None
+        for j, req in enumerate(plan.decodes):
+            # k-step plans consume decode_iters[j] tokens per request —
+            # iterations past that were masked on device and roll back
+            # here by simply not being consumed
+            for _ in range(iters[j] if iters else 1):
+                if req.state is not RequestState.DECODE:
+                    break              # cancelled (or already finished)
+                p = req.prompt_len + len(req.generated) - 1
+                if (p + 1) % self.scfg.block_size == 0:
+                    self._commit_ready_blocks(req, p + 1)
+                req.generated.append(
+                    int(req.output_script[len(req.generated)]))
+                if req.on_token is not None:
+                    req.on_token(req, req.generated[-1])
+                if req.state is RequestState.DECODE and req.decode_done:
+                    self._finish(req)
+                    break
 
     def _retire(self, plan: StepPlan, handle: StepHandle) -> None:
         """Fetch a completed step's device results: greedy sample ids for
@@ -438,8 +495,15 @@ class AsymCacheServer:
                 req.sampled_ids.append(int(ids[r]))
                 if restamp:
                     req.first_token_at = self.now
-        for i, req in enumerate(plan.decodes):
-            req.sampled_ids.append(int(ids[R + i]))
+        if plan.decode_steps > 1:
+            # ids is (k, R+B); consume only each request's decode_iters
+            # rows (host-side rollback of the masked iterations)
+            for j, req in enumerate(plan.decodes):
+                for i in range(plan.decode_iters[j]):
+                    req.sampled_ids.append(int(ids[i, R + j]))
+        else:
+            for i, req in enumerate(plan.decodes):
+                req.sampled_ids.append(int(ids[R + i]))
 
     def _finish(self, req: Request) -> None:
         # §5.1 online lifespan: feed actual per-block reuse intervals

@@ -136,14 +136,31 @@ class AgentSession:
 # telemetry
 # ---------------------------------------------------------------------------
 
-def _pct(xs: List[float], q: float) -> float:
-    import numpy as np
-    return float(np.percentile(xs, q)) if xs else float("nan")
+def percentile(xs: List[float], q: float) -> float:
+    """Linear-interpolation percentile that never raises: ``nan`` for an
+    empty sample, the value itself for a singleton.  The stress benchmark
+    reports warm-up slices that may hold zero or one observation, so this
+    must stay total."""
+    if not xs:
+        return float("nan")
+    ys = sorted(float(x) for x in xs)
+    if len(ys) == 1:
+        return ys[0]
+    q = min(max(float(q), 0.0), 100.0)
+    pos = (len(ys) - 1) * q / 100.0
+    lo = int(pos)
+    hi = min(lo + 1, len(ys) - 1)
+    return ys[lo] + (ys[hi] - ys[lo]) * (pos - lo)
 
 
-def _mean(xs: List[float]) -> float:
-    import numpy as np
-    return float(np.mean(xs)) if xs else float("nan")
+def mean(xs: List[float]) -> float:
+    """Arithmetic mean; ``nan`` for an empty sample (never raises)."""
+    return sum(float(x) for x in xs) / len(xs) if xs else float("nan")
+
+
+# short internal aliases used by the summary tables below
+_pct = percentile
+_mean = mean
 
 
 @dataclass
@@ -201,4 +218,17 @@ class OnlineTelemetry:
             "recompute_tokens": self.recompute_tokens,
             "cancelled_turns": self.cancelled_turns,
             "cancelled_jobs": self.cancelled_jobs,
+        }
+
+    def window_summary(self, first_n: int) -> Dict[str, float]:
+        """Percentiles over only the first ``first_n`` recorded turns — the
+        stress benchmark's warm-up slice.  Safe for any ``first_n`` (empty
+        and singleton windows report ``nan`` / the lone sample)."""
+        n = max(0, int(first_n))
+        return {
+            "n_turns": min(n, len(self.ttfts)),
+            "online_ttft_mean": mean(self.ttfts[:n]),
+            "online_ttft_p90": percentile(self.ttfts[:n], 90),
+            "online_tpot_p90": percentile(self.tpots[:n], 90),
+            "turn_latency_p90": percentile(self.turn_latencies[:n], 90),
         }

@@ -204,6 +204,81 @@ def agentic_workload(cfg: AgenticConfig) -> List[Request]:
 
 
 @dataclass
+class StressConfig:
+    """Control-plane stress workload (ISSUE 6): thousands of short
+    agentic sessions arriving in bursts so the resident-session count —
+    not the model math — is what the run exercises.  Prompts are short
+    and outputs long relative to them (decode-dominated), every session
+    has exactly ``turns_per_session`` turns, and tool durations are long
+    enough that most sessions sit SUSPENDED (pinned/host-resident)
+    between turns.  Run under ``clock="model"`` so the per-step
+    control-plane op counters are deterministic."""
+    n_sessions: int = 5000
+    turns_per_session: int = 2
+    system_prefix_len: int = 32            # shared across all sessions
+    task_len: Tuple[int, int] = (8, 24)    # short unique context
+    output_len: Tuple[int, int] = (24, 48) # decode-heavy
+    tool_result_len: Tuple[int, int] = (4, 12)
+    tool_duration: Tuple[float, float] = (4.0, 12.0)
+    burst_size: int = 64                   # sessions per arrival burst
+    burst_gap: float = 0.25                # model-seconds between bursts
+    vocab: int = 250
+    seed: int = 0
+
+
+def control_plane_stress_scripts(cfg: StressConfig) -> List[SessionScript]:
+    """Session scripts for the 5–10k-session control-plane stress run.
+
+    Arrivals come in bursts of ``burst_size`` sessions at the same
+    instant (worst case for the frontend event heap and the scheduler's
+    waiting queue), and the long announced tool durations keep a large
+    suspended population resident in the block manager / evictor while
+    the active set decodes."""
+    rng = random.Random(cfg.seed)
+    system_prefix = _tokens(rng, cfg.system_prefix_len, cfg.vocab)
+    scripts: List[SessionScript] = []
+    for sid in range(cfg.n_sessions):
+        arrival = (sid // cfg.burst_size) * cfg.burst_gap
+        history0 = list(system_prefix) + _tokens(
+            rng, rng.randint(*cfg.task_len), cfg.vocab)
+        turns: List[TurnScript] = []
+        for turn in range(cfg.turns_per_session):
+            is_tool = turn < cfg.turns_per_session - 1
+            output = _tokens(rng, rng.randint(*cfg.output_len), cfg.vocab)
+            tool_dur = rng.uniform(*cfg.tool_duration) if is_tool else 0.0
+            result = _tokens(rng, rng.randint(*cfg.tool_result_len),
+                             cfg.vocab)
+            turns.append(TurnScript(output=output, tool_result=result,
+                                    is_tool=is_tool, tool_duration=tool_dur,
+                                    actual_duration=tool_dur))
+        scripts.append(SessionScript(sid=sid, arrival=arrival,
+                                     history0=history0, turns=turns))
+    return scripts
+
+
+def decode_burst_workload(n_requests: int = 8,
+                          prompt_len: Tuple[int, int] = (24, 48),
+                          output_len: Tuple[int, int] = (33, 48),
+                          vocab: int = 250,
+                          seed: int = 0) -> List[Request]:
+    """All-at-once single-turn batch for the multi-token decode dispatch
+    equivalence check: every request arrives at t=0, prompts are short
+    (prefill drains in one or two steps) and output lengths straddle
+    non-multiples of the k bucket so per-request early exit + host-side
+    rollback of unconsumed iterations is exercised."""
+    rng = random.Random(seed)
+    requests: List[Request] = []
+    lens = list(range(output_len[0], output_len[1] + 1))
+    for rid in range(n_requests):
+        prompt = _tokens(rng, rng.randint(*prompt_len), vocab)
+        out = _tokens(rng, lens[rid % len(lens)], vocab)
+        requests.append(Request(rid=rid, session_id=rid,
+                                prompt_tokens=prompt, output_script=out,
+                                arrival=0.0))
+    return requests
+
+
+@dataclass
 class SharedPrefixConfig:
     """Single-turn agentic jobs where most prompts lead with one long
     shared system-prompt + tool-preamble block — the Continuum fleet

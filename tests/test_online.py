@@ -59,14 +59,15 @@ def _real_server(cfg, params, num_blocks=256, host_blocks=0):
     return AsymCacheServer(cfg, params, scfg, ecfg=ecfg)
 
 
-def _sim_server(num_blocks, host_blocks=0):
+def _sim_server(num_blocks, host_blocks=0, max_decode_steps=1):
     cfg = get_config("llama31-8b")
     cm = analytic_cost_model(cfg, H20)
     scfg = ServerConfig(
         policy="asymcache", num_blocks=num_blocks, block_size=16,
         clock="model", execute_model=False, host_blocks=host_blocks,
         scheduler=SchedulerConfig(token_budget=192, max_chunk=96,
-                                  max_prefills=2, max_decodes=16))
+                                  max_prefills=2, max_decodes=16,
+                                  max_decode_steps=max_decode_steps))
     return AsymCacheServer(cfg, None, scfg, cost_model=cm, sim_cost_model=cm)
 
 
@@ -161,6 +162,48 @@ def test_prefetch_eliminates_resume_stalls():
     assert on["prefetch_hits"] > 0
     # rescuing blocks from the host LRU avoids recompute
     assert on["resumed_recompute_tokens"] < off["resumed_recompute_tokens"]
+
+
+def test_prefetch_pins_survive_multi_token_dispatch():
+    """Prefetch-pin lifecycle under multi-token decode dispatch: a
+    session whose predicted resume lands mid-k-step keeps its pinned
+    blocks — the fused call allocates nothing mid-iteration (blocks are
+    allocated up front at admission), so a k=8 run under the same memory
+    pressure must still resume every session with zero demand swap-ins
+    and emit byte-identical outputs to the k=1 run."""
+    acfg = AgenticConfig(n_jobs=8, seed=3, **ACFG)
+    res, outputs, pins_alive = {}, {}, {}
+    for k in (1, 8):
+        srv = _sim_server(num_blocks=48, host_blocks=32, max_decode_steps=k)
+        # record, at every dispatch of a k>1 plan, whether any currently
+        # pinned block is missing from the block table (i.e. was
+        # reclaimed while its resume pin was live)
+        violations = []
+        orig = srv.engine.dispatch
+
+        def snapping(plan, _srv=srv, _orig=orig, _v=violations):
+            if plan.decode_steps > 1:
+                for blk in _srv.bm.blocks:
+                    if blk.pinned_until > _srv.now and blk.key is not None:
+                        _v.append(_srv.bm.table.get(blk.key) != blk.slot)
+            return _orig(plan)
+
+        srv.engine.dispatch = snapping
+        fe = OnlineFrontend(srv, agentic_session_scripts(acfg),
+                            FrontendConfig(prefetch=True,
+                                           prefetch_lead=0.3))
+        res[k] = fe.run()
+        outputs[k] = [(s.sid, [(r.prompt_tokens, r.generated)
+                               for r in s.requests]) for s in fe.sessions]
+        pins_alive[k] = violations
+    # the k path actually ran, with pins live during fused dispatches
+    assert res[8]["multi_token_dispatches"] > 0
+    assert res[8]["prefetch_pins"] > 0
+    assert pins_alive[8] and not any(pins_alive[8])
+    # pinned blocks survived: every resume still lands without a stall
+    assert res[8]["resume_swap_stalls"] == 0
+    assert res[8]["prefetch_swap_ins"] > 0
+    assert outputs[8] == outputs[1]
 
 
 def test_prefetch_requires_prefix_sharing():
@@ -425,3 +468,39 @@ def test_resume_predictor():
     r = ResumePredictor()
     r.observe(actual=0.1, announced=5.0)
     assert r.predict(0.2) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# telemetry percentile helpers (total on empty/singleton samples)
+# ---------------------------------------------------------------------------
+
+def test_telemetry_percentiles_total():
+    from repro.serving.sessions import OnlineTelemetry, mean, percentile
+
+    # empty: nan, never a raise
+    assert math.isnan(percentile([], 50)) and math.isnan(mean([]))
+    # singleton: the lone sample at every q
+    for q in (0, 50, 90, 99, 100):
+        assert percentile([3.5], q) == 3.5
+    assert mean([3.5]) == 3.5
+    # q clamps instead of raising
+    assert percentile([1.0, 2.0], -5) == 1.0
+    assert percentile([1.0, 2.0], 250) == 2.0
+    # linear interpolation on a known sample
+    assert percentile([0.0, 10.0], 50) == pytest.approx(5.0)
+    assert percentile([1.0, 2.0, 3.0, 4.0], 90) == pytest.approx(3.7)
+
+    # a fresh telemetry (zero recorded turns/jobs) summarizes cleanly
+    tel = OnlineTelemetry()
+    s = tel.summary()
+    assert s["n_jobs"] == 0 and s["n_turns"] == 0
+    assert math.isnan(s["online_ttft_p90"])
+    # warm-up window: empty, singleton, and over-long slices all total
+    assert math.isnan(tel.window_summary(10)["online_ttft_p90"])
+    tel.ttfts.append(0.25)
+    tel.tpots.append(0.01)
+    tel.turn_latencies.append(0.5)
+    assert tel.window_summary(1)["online_ttft_p90"] == 0.25
+    w = tel.window_summary(10_000)
+    assert w["n_turns"] == 1 and w["turn_latency_p90"] == 0.5
+    assert tel.window_summary(0)["n_turns"] == 0
