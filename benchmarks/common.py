@@ -5,7 +5,7 @@ import time
 from typing import Dict, List, Optional
 
 from repro.configs import get_config
-from repro.core import H20, TPU_V5E, analytic_cost_model
+from repro.core import H20, TPU_V5E, OffloadConfig, analytic_cost_model
 from repro.serving import (
     AgenticConfig,
     AsymCacheServer,
@@ -29,7 +29,9 @@ def paper_scale_server(policy: str, model: str = "llama31-8b",
                        adaptive_chunking: bool = True,
                        num_blocks_override: Optional[int] = None,
                        use_hit_count: bool = True,
-                       host_blocks: int = 0) -> AsymCacheServer:
+                       host_blocks: int = 0,
+                       offload: Optional[OffloadConfig] = None
+                       ) -> AsymCacheServer:
     """Discrete-event server at paper scale: real block manager/evictor/
     scheduler, Eq.-6 analytic cost model on the paper's H20 hardware."""
     cfg = get_config(model)
@@ -42,6 +44,7 @@ def paper_scale_server(policy: str, model: str = "llama31-8b",
         clock="model", execute_model=False, continuum_ttl=continuum,
         lifespan=lifespan, reuse_prob=reuse_prob, slope_ratio=slope_ratio,
         use_hit_count=use_hit_count, host_blocks=host_blocks,
+        offload=offload or OffloadConfig(),
         scheduler=SchedulerConfig(
             block_size=BLOCK_SIZE, token_budget=4096, max_prefills=4,
             max_chunk=2048, min_chunk=256, max_decodes=64,

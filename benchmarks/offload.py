@@ -1,38 +1,259 @@
-"""Beyond-paper: hierarchical KV storage (paper §7, flagged as future
-work there, implemented here).
+"""Asymmetric K/V host-tier offload: bytes-moved-gated A/B benchmark
+(paper §7 hierarchical storage + the Kcache split-residency extension).
 
-Evicted blocks spill to a host tier; on reuse they swap back over PCIe
-instead of being recomputed.  The swap cost is SIZE-based while recompute
-cost is POSITION-based, so host reloads win hardest for deep-position
-blocks — the same asymmetry the evictor exploits, now across tiers."""
+Three sections, all gated on DETERMINISTIC counters — never wall clock:
+
+**A. Lossless wire format (real engine, pipeline depth 0 AND 1).** Two
+servers serve identical multi-turn workloads with identical snapped
+numerics (``quant="int8"``, snap-at-write) and identical residency
+policy; the only difference is the wire format of queued swap payloads:
+
+  * control — ``payload_fp=True``: full-precision f32 halves (the
+    symmetric full-precision swap baseline);
+  * split — int8 codes + per-page-per-head scales through the split
+    ``swap_k``/``swap_v`` queue buckets, dequantized inside the jitted
+    step.
+
+Gates: byte-identical first-token logits / generated tokens / greedy
+samples, equal swap-in counts, equal block hit rate, swap-stall parity
+(``eager_swaps`` / ``instep_swaps``), engine wire bytes cut >= 2x
+(``swap_bytes_shipped``), and an unchanged jit lattice
+(``jit_traces == len(buckets_used)``).
+
+**B. Lossy opt-in (real engine).** ``lossy_offload=True`` keeps pools
+full precision and quantizes at spill time with dynamic scales; the
+measured max relative first-token logit error vs the unquantized
+reference run is reported and gated under ``LOSSY_ERR_BOUND``.
+
+**C. Paper-scale residency policy (discrete-event sim).** The memory-
+pressured LongBench-like trace from the original offload benchmark, now
+A/B: full-precision symmetric spills vs quantized payloads +
+``retain_host`` clean spills + the keep-K drop policy.  Gates: host-tier
+bytes moved (``bytes_swapped_{in,out}_{k,v}``) cut >= 2x at
+equal-or-better block hit rate.
+
+Metrics land in ``BENCH_offload.json`` (uploaded as a CI artifact).
+
+    PYTHONPATH=src:. python -m benchmarks.run --only offload
+    PYTHONPATH=src:. python benchmarks/offload.py --smoke   # CI gate
+"""
 from __future__ import annotations
 
-from benchmarks.common import Rows, longbench_like, pressured_server, workload_footprint
+import argparse
+
+import numpy as np
+
+from benchmarks.common import (
+    Rows,
+    longbench_like,
+    pressured_server,
+    workload_footprint,
+    write_bench_json,
+)
+
+# measured max relative logit error of the lossy arm (see section B):
+# 0.131 on the scaled smoke model; the bound adds headroom for platform
+# drift in XLA reductions, not for regressions in the requant bookkeeping
+LOSSY_ERR_BOUND = 0.2
 
 
-def main(n_sessions: int = 10) -> Rows:
-    rows = Rows()
+# ---------------------------------------------------------------------------
+# real-engine arms (sections A and B)
+# ---------------------------------------------------------------------------
+
+def _mk_workload(n_sessions: int, seed: int = 0):
+    from repro.serving import multi_turn_workload
+    from repro.serving.workload import WorkloadConfig
+    return multi_turn_workload(WorkloadConfig(
+        n_sessions=n_sessions, turns_per_session=(2, 3),
+        first_ctx_len=(96, 200), output_len=(12, 24), qps=1.0, seed=seed))
+
+
+def _engine_server(cfg, params, offload, depth):
+    from repro.serving import AsymCacheServer, SchedulerConfig, ServerConfig
+    scfg = ServerConfig(
+        policy="asymcache", num_blocks=40, block_size=16, clock="model",
+        host_blocks=128, pipeline_depth=depth, offload=offload,
+        scheduler=SchedulerConfig(token_budget=128, max_chunk=64,
+                                  max_prefills=2, max_decodes=8))
+    return AsymCacheServer(cfg, params, scfg)
+
+
+def _run_arm(cfg, params, offload, depth, n_sessions, seed):
+    wl = _mk_workload(n_sessions, seed)
+    srv = _engine_server(cfg, params, offload, depth)
+    res = srv.run(wl)
+    return srv, wl, res
+
+
+def _lossless_ab(cfg, params, n_sessions: int, seed: int):
+    """Section A: control (fp payloads) vs split (int8 payloads), both
+    pipeline depths.  Returns per-depth metric dicts; raises on any gate
+    failure."""
+    from repro.core import OffloadConfig
+    control = OffloadConfig(quant="int8", payload_fp=True, retain_host=True)
+    split = OffloadConfig(quant="int8", retain_host=True)
+
+    out = {}
+    for depth in (0, 1):
+        srv_a, wl_a, res_a = _run_arm(cfg, params, control, depth,
+                                      n_sessions, seed)
+        srv_b, wl_b, res_b = _run_arm(cfg, params, split, depth,
+                                      n_sessions, seed)
+
+        # byte identity: the wire format must not change ONE bit
+        for a, b in zip(wl_a, wl_b):
+            assert a.generated == b.generated, depth
+            assert a.sampled_ids == b.sampled_ids, depth
+            assert np.array_equal(a.first_logits, b.first_logits), depth
+
+        # same residency decisions, same stalls, same hit rate
+        assert res_a["swap_ins"] > 0, "gate vacuous: no swap-ins occurred"
+        assert res_b["swap_ins"] == res_a["swap_ins"], depth
+        assert res_b["block_hit_rate"] == res_a["block_hit_rate"], depth
+        # swap-stall parity: the wire format must not push swaps out of
+        # the jitted step onto the synchronous eager path
+        pa, pb = srv_a.engine.perf_counters(), srv_b.engine.perf_counters()
+        assert pb["eager_swaps"] == pa["eager_swaps"], depth
+        assert pb["instep_swaps"] == pa["instep_swaps"], depth
+
+        # the actual perf claim: >= 2x fewer wire bytes through the step
+        sa, sb = pa["swap_bytes_shipped"], pb["swap_bytes_shipped"]
+        assert sa > 0 and sb * 2 <= sa, (depth, sa, sb)
+
+        # split swap queues must not widen the compile-shape lattice
+        assert srv_b.engine.jit_traces == len(srv_b.engine.buckets_used)
+
+        out[f"depth{depth}"] = {
+            "swap_ins": res_a["swap_ins"],
+            "instep_swaps": pa["instep_swaps"],
+            "eager_swaps": pa["eager_swaps"],
+            "block_hit_rate": res_a["block_hit_rate"],
+            "bytes_shipped_fp": sa,
+            "bytes_shipped_q8": sb,
+            "wire_bytes_ratio": sa / sb,
+            "jit_traces": srv_b.engine.jit_traces,
+        }
+    return out
+
+
+def _lossy_error(cfg, params, n_sessions: int, seed: int):
+    """Section B: max relative first-token logit error of the opt-in
+    lossy arm vs the full-precision (quant off) reference."""
+    from repro.core import OffloadConfig
+    _, wl_ref, _ = _run_arm(cfg, params, OffloadConfig(), 1,
+                            n_sessions, seed)
+    lossy = OffloadConfig(quant="int8", lossy_offload=True)
+    _, wl_q, res_q = _run_arm(cfg, params, lossy, 1, n_sessions, seed)
+    assert res_q["swap_ins"] > 0, "gate vacuous: lossy arm never swapped"
+
+    err = 0.0
+    for a, b in zip(wl_ref, wl_q):
+        denom = np.max(np.abs(a.first_logits)) + 1e-9
+        err = max(err, float(np.max(np.abs(
+            a.first_logits - b.first_logits)) / denom))
+    assert err <= LOSSY_ERR_BOUND, (err, LOSSY_ERR_BOUND)
+    return {"max_rel_logit_err": err, "bound": LOSSY_ERR_BOUND,
+            "swap_ins": res_q["swap_ins"]}
+
+
+# ---------------------------------------------------------------------------
+# paper-scale sim arms (section C)
+# ---------------------------------------------------------------------------
+
+def _bm_bytes(res) -> int:
+    return (res["bytes_swapped_in_k"] + res["bytes_swapped_in_v"]
+            + res["bytes_swapped_out_k"] + res["bytes_swapped_out_v"])
+
+
+def _sim_section(rows: Rows, n_sessions: int):
+    """Memory-pressured LongBench-like trace; the host tier holds 1x the
+    workload footprint.  fp symmetric spills vs quantized+retained+keep-K."""
+    from repro.core import OffloadConfig
+    arms = (
+        ("fp", OffloadConfig()),
+        ("q8+retain", OffloadConfig(quant="int8", retain_host=True,
+                                    keep_k_half=True)),
+    )
+    out = {}
     for disp, ratio in (("low", 5.0), ("high", 10.0)):
         wl_args = dict(qps=0.2, intra_ratio=ratio,
                        seed=0 if disp == "low" else 1)
-        base_wl = longbench_like(n_sessions, **wl_args)
-        foot_blocks = workload_footprint(base_wl) // 16
-        for host_frac, label in ((0.0, "device-only"),
-                                 (1.0, "host=1x-footprint"),
-                                 (4.0, "host=4x-footprint")):
+        foot_blocks = workload_footprint(
+            longbench_like(n_sessions, **wl_args)) // 16
+        for label, off in arms:
             wl = longbench_like(n_sessions, **wl_args)
             srv = pressured_server(
                 "asymcache", wl, pressure=0.3,
                 lifespan=2.0 * ratio / 0.2,
-                host_blocks=int(foot_blocks * host_frac))
+                host_blocks=foot_blocks, offload=off)
             res = srv.run(wl)
+            out[f"{disp}/{label}"] = {
+                "bm_bytes_moved": _bm_bytes(res),
+                "block_hit_rate": res["block_hit_rate"],
+                "swap_ins": res["swap_ins"],
+                "host_evictions": res["n_host_evictions"],
+                "host_half_drops": res["n_host_half_drops"],
+                "clean_half_spills": res["clean_half_spills"],
+            }
             rows.add(f"offload/{disp}/{label}", res["ttft_mean"] * 1e6,
                      f"tpot_ms={res['tpot_mean']*1e3:.2f};"
                      f"hit={res['block_hit_rate']:.3f};"
-                     f"swap_ins={res.get('swap_ins', 0)};"
-                     f"evict={res['evictions']}")
+                     f"swap_ins={res['swap_ins']};"
+                     f"bytes_moved={_bm_bytes(res)}")
+        fp, q8 = out[f"{disp}/fp"], out[f"{disp}/q8+retain"]
+        assert fp["bm_bytes_moved"] > 0, "gate vacuous: no host-tier traffic"
+        assert q8["bm_bytes_moved"] * 2 <= fp["bm_bytes_moved"], (disp, fp, q8)
+        assert q8["block_hit_rate"] >= fp["block_hit_rate"], (disp, fp, q8)
+    return out
+
+
+def main(smoke: bool = False, n_sessions: int = 10, seed: int = 0) -> Rows:
+    import jax
+    from repro.configs import get_smoke_config, scaled_config
+    from repro.models import init_params
+
+    engine_sessions = 3 if smoke else 4
+    if smoke:
+        n_sessions = 6
+
+    cfg = scaled_config(get_smoke_config("llama31-8b"), dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    rows = Rows()
+    lossless = _lossless_ab(cfg, params, engine_sessions, seed)
+    for depth, m in lossless.items():
+        rows.add(f"offload/lossless/{depth}", 0.0,
+                 f"bytes_fp={m['bytes_shipped_fp']};"
+                 f"bytes_q8={m['bytes_shipped_q8']};"
+                 f"ratio={m['wire_bytes_ratio']:.2f};byte_identical=1")
+    lossy = _lossy_error(cfg, params, engine_sessions, seed)
+    rows.add("offload/lossy", 0.0,
+             f"max_rel_logit_err={lossy['max_rel_logit_err']:.2e};"
+             f"bound={LOSSY_ERR_BOUND}")
+    sim = _sim_section(rows, n_sessions)
+
+    write_bench_json("offload", {
+        "smoke": smoke,
+        "lossless_wire": lossless,
+        "lossy": lossy,
+        "paper_scale_sim": sim,
+        "gates": {
+            "byte_identical_depth_0_and_1": True,
+            "wire_bytes_cut_2x": True,
+            "swap_stall_parity": True,
+            "hit_rate_parity": True,
+            "jit_lattice_unchanged": True,
+            "sim_bytes_moved_cut_2x": True,
+            "lossy_err_bound": LOSSY_ERR_BOUND,
+        },
+    })
     return rows
 
 
 if __name__ == "__main__":
-    main().emit()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes; gates only (CI)")
+    a = ap.parse_args()
+    main(smoke=a.smoke).emit()

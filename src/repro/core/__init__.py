@@ -30,6 +30,14 @@ from repro.core.evictor import (
 )
 from repro.core.freq import EwmaCounter, FreqParams
 from repro.core.lifespan import LifespanTracker, ResumePredictor
+from repro.core.offload import (
+    HostEntry,
+    HostHalf,
+    OffloadConfig,
+    dequantize_half,
+    quantize_half,
+    snap_to_grid_np,
+)
 from repro.core.prefix_trie import PrefixMatch, PrefixTrie
 from repro.core.treap import Treap
 
@@ -43,4 +51,6 @@ __all__ = [
     "PensieveEvictor", "make_policy",
     "EwmaCounter", "FreqParams", "LifespanTracker", "ResumePredictor",
     "Treap",
+    "HostEntry", "HostHalf", "OffloadConfig",
+    "dequantize_half", "quantize_half", "snap_to_grid_np",
 ]

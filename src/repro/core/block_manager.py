@@ -41,9 +41,13 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.cost_model import CostModel
 from repro.core.evictor import EvictableMeta, EvictionPolicy
 from repro.core.freq import EwmaCounter, FreqParams
+from repro.core.offload import (HostEntry, HostHalf, OffloadConfig,
+                                ScaleCache, quantize_half)
 from repro.core.prefix_trie import PrefixTrie
 
 
@@ -68,6 +72,9 @@ class Block:
     last_access: float = 0.0
     count: float = 1.0              # EWMA hit count
     boost: float = 1.0              # agentic tool-call correction factor
+    # k-early prefetch restored only the K half; the V half is still
+    # host-resident (pinned) and streams in when the block is acquired
+    v_pending: bool = False
 
 
 @dataclass
@@ -104,7 +111,11 @@ class BlockManager:
                  host_blocks: int = 0,
                  swap_out_fn=None, swap_in_fn=None,
                  prefix_sharing: bool = True,
-                 n_shards: int = 1):
+                 n_shards: int = 1,
+                 offload: Optional[OffloadConfig] = None,
+                 block_bytes: Optional[Tuple[int, int]] = None,
+                 payload_half_bytes: Optional[Tuple[int, int]] = None,
+                 pcie_bw: float = 1.2e10):
         self.num_blocks = num_blocks
         self.block_size = block_size
         # ---- KV sharding (sharded serving engine): the device page pool
@@ -125,16 +136,51 @@ class BlockManager:
         self.blocks: List[Block] = [Block(slot=i) for i in range(num_blocks)]
         self.free: List[int] = list(range(num_blocks - 1, -1, -1))
         self.table: Dict[int, int] = {}     # chain hash -> slot
-        # ---- host tier (paper §7): evicted blocks spill to host memory;
-        # reload cost is SIZE-based (one PCIe/DMA copy), not position-based,
-        # so the device evictor's position-aware policy is unchanged and
-        # the host tier runs plain LRU over (key -> payload, block_pos).
+        # ---- host tier (paper §7, split K/V residency): evicted blocks
+        # spill to host memory as per-half payloads (Kcache asymmetry:
+        # the K and V halves place independently).  Reload cost is
+        # SIZE-based (one PCIe/DMA copy), not position-based, so the
+        # device evictor's position-aware policy is unchanged; the host
+        # tier runs LRU over (key -> HostEntry) under a BYTE budget of
+        # host_blocks full-precision blocks — quantized payloads
+        # therefore fit proportionally more blocks in the same budget.
         self.host_blocks = host_blocks
-        self.host_tier: "OrderedDict[int, Tuple[object, int]]" = OrderedDict()
-        self.swap_out_fn = swap_out_fn      # slot -> payload (device->host)
-        self.swap_in_fn = swap_in_fn        # (slot, payload) -> None
+        self.host_tier: "OrderedDict[int, HostEntry]" = OrderedDict()
+        # slot -> (k_half|None, v_half|None); None = read from pool.
+        # ALSO purges any still-queued swap-in halves for the slot.
+        self.swap_out_fn = swap_out_fn
+        self.swap_in_fn = swap_in_fn        # (slot, (k|None, v|None)) -> None
+        self.offload = offload or OffloadConfig()
+        # full-precision per-half bytes (budget unit) and the configured
+        # wire-format per-half bytes (sim accounting when payloads are
+        # never materialized); (1, 1) keeps unit-test BlockManagers on
+        # "1 byte per half" so the byte budget degenerates to the old
+        # host_blocks entry count exactly
+        self._fp_half_bytes = tuple(block_bytes) if block_bytes else (1, 1)
+        self._wire_half_bytes = (tuple(payload_half_bytes)
+                                 if payload_half_bytes
+                                 else self._fp_half_bytes)
+        self._host_budget = host_blocks * sum(self._fp_half_bytes)
+        self._grid_scale = self.offload.clip / 127.0
+        self._scales = ScaleCache(
+            self.offload.scale_cache if self.offload.lossy_offload else 0)
+        # chain hash -> device slot of blocks whose host V half must not
+        # be dropped (a k-early restore owes its V completion to it)
+        self._host_pinned: Dict[int, int] = {}
+        self.pcie_bw = pcie_bw
         self.n_swap_ins = 0
         self.n_swap_outs = 0
+        self.host_resident_bytes = 0
+        self.bytes_swapped_in_k = 0
+        self.bytes_swapped_in_v = 0
+        self.bytes_swapped_out_k = 0
+        self.bytes_swapped_out_v = 0
+        self.n_host_evictions = 0       # whole entries LRU-dropped
+        self.n_host_half_drops = 0      # single halves shed (entry kept)
+        self.n_clean_half_spills = 0    # spilled halves the host already had
+        self.n_v_half_streams = 0       # k-early V halves streamed on demand
+        self.n_k_early_prefetches = 0
+        self.n_pending_purges = 0       # v_pending blocks orphaned -> miss
         # ---- cross-request prefix sharing: token radix trie over served
         # sequences + pending copy-on-write page copies (engine-drained)
         self.prefix_trie: Optional[PrefixTrie] = \
@@ -209,10 +255,19 @@ class BlockManager:
         for pos, h in enumerate(hashes):
             slot = self.table.get(h)
             self.n_lookups += 1
+            if slot is not None and self.blocks[slot].v_pending \
+                    and not self._host_has(h, "v"):
+                # the block's K half is device-resident but its pending V
+                # half vanished from the host tier: the content can never
+                # be completed, so degrade to a lossless recompute miss
+                self._purge_pending_block(h, slot)
+                slot = None
             if slot is None:
                 hit_slots.append(None)
                 hit_mask.append(False)
-                host_hits.append(h in self.host_tier)
+                # only a COMPLETE host entry can serve a swap-in; a kept-K
+                # remnant still needs the block recomputed
+                host_hits.append(self._host_complete(h))
                 continue
             host_hits.append(False)
             self.n_hits += 1
@@ -234,6 +289,12 @@ class BlockManager:
         scheduler calls :meth:`realize_prefetch` only once the request is
         actually admitted."""
         blk = self.blocks[slot]
+        if blk.v_pending:
+            # k-early prefetch: the V half streams in exactly when the
+            # block is first used — through the in-step swap queue, so it
+            # lands before any attention that reads it.  This is a device
+            # hit, NOT an admission swap (no resume swap stall).
+            self._complete_v_half(slot, blk)
         if blk.ref_count == 0:
             self.policy.remove(slot)
             self.reuse_intervals.append(max(now - blk.last_access, 1e-9))
@@ -388,22 +449,204 @@ class BlockManager:
             blk.peak_ref = 1
             blk.count = 1.0
             blk.boost = 1.0
+            blk.v_pending = False
             blk.last_access = now
         return out
 
     def _erase(self, slot: int) -> None:
         blk = self.blocks[slot]
-        if blk.key is not None:
-            self.evicted_positions.append(blk.block_pos)
-            self.table.pop(blk.key, None)
-            if self.host_blocks > 0:
-                payload = self.swap_out_fn(slot) if self.swap_out_fn else None
-                self.host_tier[blk.key] = (payload, blk.block_pos)
-                self.host_tier.move_to_end(blk.key)
-                self.n_swap_outs += 1
-                while len(self.host_tier) > self.host_blocks:
-                    self.host_tier.popitem(last=False)      # host LRU
-            blk.key = None
+        if blk.key is None:
+            return
+        key = blk.key
+        self.evicted_positions.append(blk.block_pos)
+        self.table.pop(key, None)
+        was_v_pending = blk.v_pending
+        blk.v_pending = False
+        self._host_pinned.pop(key, None)
+        if self.host_blocks > 0:
+            e = self.host_tier.get(key)
+            # committed block content is immutable (content-addressed by
+            # chain hash), so any half the host already holds is still
+            # valid: spill ONLY the missing halves.  A clean spill moves
+            # zero bytes AND skips the synchronous device pool read.  A
+            # v_pending block's V half never left the host.
+            need_k = e is None or e.k is None
+            need_v = (e is None or e.v is None) and not was_v_pending
+            k_raw = v_raw = None
+            if self.swap_out_fn is not None:
+                # always called even when nothing is needed: besides
+                # reading the needed halves, the engine purges any
+                # still-queued swap-in halves for this slot (the PR 5
+                # evict-while-queued fix) so a late in-step scatter can't
+                # clobber the reallocated page
+                k_raw, v_raw = self.swap_out_fn(slot, need_k, need_v)
+            if e is None:
+                e = HostEntry(block_pos=blk.block_pos)
+                self.host_tier[key] = e
+            if need_k:
+                e.k = self._encode_half(k_raw, key, "k")
+                self.bytes_swapped_out_k += e.k.nbytes
+                self.host_resident_bytes += e.k.nbytes
+            else:
+                self.n_clean_half_spills += 1
+            if need_v:
+                e.v = self._encode_half(v_raw, key, "v")
+                self.bytes_swapped_out_v += e.v.nbytes
+                self.host_resident_bytes += e.v.nbytes
+            else:
+                self.n_clean_half_spills += 1
+            self.host_tier.move_to_end(key)
+            self.n_swap_outs += 1
+            self._enforce_host_budget()
+        blk.key = None
+
+    # ------------------------------------------------------------------
+    # host-tier internals (split K/V residency + quantized payloads)
+    # ------------------------------------------------------------------
+    def _host_has(self, key: int, which: str) -> bool:
+        e = self.host_tier.get(key)
+        return e is not None and getattr(e, which) is not None
+
+    def _host_complete(self, key: int) -> bool:
+        e = self.host_tier.get(key)
+        return e is not None and e.complete
+
+    def _encode_half(self, raw, key: int, which: str) -> HostHalf:
+        """Wire-encode one spilled half.  ``raw`` is None (simulation /
+        no engine: account the configured wire size), an ndarray read
+        from the device pool (quantize per config), or already a
+        :class:`HostHalf` (the evict-while-queued intercept returned the
+        queued wire half verbatim — kept bit-exact by identity, no
+        requantization)."""
+        idx = 0 if which == "k" else 1
+        fmt = self.offload.wire_format
+        if isinstance(raw, HostHalf):
+            return raw
+        if raw is None:
+            return HostHalf(data=None, scale=None,
+                            nbytes=self._wire_half_bytes[idx], fmt=fmt)
+        arr = np.asarray(raw)
+        if fmt != "q8":
+            return quantize_half(arr, fmt)
+        if self.offload.lossy_offload:
+            # exact-requantization bookkeeping: restored content re-spills
+            # with its remembered scale, recovering identical codes
+            hh = quantize_half(arr, "q8",
+                               scale=self._scales.get(key, which))
+            self._scales.put(key, which, hh.scale)
+            return hh
+        # lossless: pool values were snapped to this static grid at write
+        # time, so the round-trip is exact by construction
+        return quantize_half(arr, "q8", static_scale=self._grid_scale)
+
+    def _consume_entry(self, key: int) -> None:
+        """Remove a host entry that was swapped back in (not an LRU drop)."""
+        e = self.host_tier.pop(key, None)
+        if e is not None:
+            self.host_resident_bytes -= e.nbytes
+
+    def _drop_entry(self, key: int) -> None:
+        e = self.host_tier.pop(key)
+        self.host_resident_bytes -= e.nbytes
+        self.n_host_evictions += 1
+
+    def _keep_k(self, e: HostEntry) -> bool:
+        """§4 per-half swap-vs-recompute: keep a deep-position K half
+        whose host restore beats its share of the block's recompute."""
+        return self.cost_model.half_offload_gain(
+            e.block_pos * self.block_size, self.block_size,
+            e.k.nbytes, self.pcie_bw) > 0.0
+
+    def _enforce_host_budget(self) -> None:
+        """LRU walk shedding host bytes down to the budget.  With
+        ``keep_k_half`` the V half goes first (Kcache asymmetry) and a
+        positive-gain K half survives as a re-aged remnant; a second
+        pass drops remnants if the budget is still exceeded.  Halves
+        pinned by in-flight k-early completions are never dropped (their
+        count is bounded by outstanding prefetches)."""
+        skipped = 0
+        while self.host_resident_bytes > self._host_budget \
+                and skipped < len(self.host_tier):
+            key = next(iter(self.host_tier))
+            e = self.host_tier[key]
+            if key in self._host_pinned:
+                self.host_tier.move_to_end(key)
+                skipped += 1
+                continue
+            if self.offload.keep_k_half and e.v is not None:
+                self.host_resident_bytes -= e.v.nbytes
+                e.v = None
+                self.n_host_half_drops += 1
+                if e.k is not None and self._keep_k(e):
+                    self.host_tier.move_to_end(key)     # K remnant
+                    skipped += 1
+                    continue
+            self._drop_entry(key)
+        if self.host_resident_bytes <= self._host_budget:
+            return
+        for key in list(self.host_tier):
+            if self.host_resident_bytes <= self._host_budget:
+                return
+            if key not in self._host_pinned:
+                self._drop_entry(key)
+
+    def _complete_v_half(self, slot: int, blk: Block) -> None:
+        """Stream the on-demand V half of a k-early-prefetched block
+        through the in-step swap queue.  ``match`` already verified the
+        host V half exists (it was pinned against budget drops)."""
+        key = blk.key
+        e = self.host_tier[key]
+        vh = e.v
+        if self.swap_in_fn is not None and vh.data is not None:
+            self.swap_in_fn(slot, (None, vh))
+        self.bytes_swapped_in_v += vh.nbytes
+        self.n_v_half_streams += 1
+        blk.v_pending = False
+        self._host_pinned.pop(key, None)
+        if self.offload.retain_host:
+            self.host_tier.move_to_end(key)
+        else:
+            self._consume_entry(key)
+
+    def _purge_pending_block(self, key: int, slot: int) -> None:
+        """A v_pending block whose host V half vanished can never be
+        completed: unmap it so the request recomputes it losslessly."""
+        blk = self.blocks[slot]
+        self.table.pop(key, None)
+        self.prefetch_slots.pop(slot, None)
+        self._host_pinned.pop(key, None)
+        blk.v_pending = False
+        blk.key = None
+        blk.pinned_until = -math.inf
+        self.n_pending_purges += 1
+        if self.swap_out_fn is not None:
+            # purge any still-queued K half for the slot before freeing it
+            self.swap_out_fn(slot, False, False)
+        if slot in self.policy:
+            self.policy.remove(slot)
+        if blk.ref_count == 0:
+            self.free.append(slot)
+
+    def counters(self) -> Dict[str, int]:
+        """Deterministic host-tier/offload accounting, merged verbatim
+        into every server result (frozen in tests/test_perf_counters)."""
+        return {
+            "swap_ins": self.n_swap_ins,
+            "swap_outs": self.n_swap_outs,
+            "evictions": self.n_evictions,
+            "bytes_swapped_in_k": self.bytes_swapped_in_k,
+            "bytes_swapped_in_v": self.bytes_swapped_in_v,
+            "bytes_swapped_out_k": self.bytes_swapped_out_k,
+            "bytes_swapped_out_v": self.bytes_swapped_out_v,
+            "host_resident_bytes": self.host_resident_bytes,
+            "host_entries": len(self.host_tier),
+            "n_host_evictions": self.n_host_evictions,
+            "n_host_half_drops": self.n_host_half_drops,
+            "clean_half_spills": self.n_clean_half_spills,
+            "v_half_streams": self.n_v_half_streams,
+            "k_early_prefetches": self.n_k_early_prefetches,
+            "pending_purges": self.n_pending_purges,
+        }
 
     def commit(self, slot: int, key: int, block_pos: int) -> None:
         """Register a filled block in the hash table (reusable from now)."""
@@ -434,6 +677,14 @@ class BlockManager:
         blk = self.blocks[slot]
         log_cost = self.cost_model.log_block_cost(
             blk.block_pos * self.block_size, self.block_size)
+        if self.offload.swap_aware_eviction and blk.key is not None \
+                and self._host_complete(blk.key):
+            # retained host copy: evicting this block costs only the
+            # cheaper of recompute and swap-restore (§4, per-half bytes)
+            e = self.host_tier[blk.key]
+            log_cost = math.log(max(self.cost_model.restore_cost(
+                blk.block_pos * self.block_size, self.block_size,
+                e.nbytes, self.pcie_bw), 1e-12))
         # shared-block savings: a block k requests mapped concurrently is
         # worth k recomputations if evicted -> weight its cost by peak_ref
         self.policy.add(slot, EvictableMeta(
@@ -478,15 +729,46 @@ class BlockManager:
         BEFORE ``allocate()`` runs, and the evictions allocate triggers
         spill fresh blocks into the host tier, whose LRU may push the
         matched key out in between.  The caller must then leave the block
-        as a gap (recomputed losslessly) instead of marking it hit."""
-        item = self.host_tier.pop(key, None)
-        if item is None:
+        as a gap (recomputed losslessly) instead of marking it hit.
+
+        Only a COMPLETE entry (both halves host-resident) can restore a
+        block.  With ``retain_host`` the entry stays in the tier after
+        the swap-in — committed content is immutable, so the copy stays
+        valid and the block's next eviction becomes a clean spill."""
+        e = self.host_tier.get(key)
+        if e is None or not e.complete:
             return False
-        payload, _pos = item
-        if self.swap_in_fn is not None and payload is not None:
-            self.swap_in_fn(slot, payload)
+        if self.swap_in_fn is not None and \
+                (e.k.data is not None or e.v.data is not None):
+            self.swap_in_fn(slot, (e.k, e.v))
+        self.bytes_swapped_in_k += e.k.nbytes
+        self.bytes_swapped_in_v += e.v.nbytes
         self.commit(slot, key, block_pos)
         self.n_swap_ins += 1
+        if self.offload.retain_host:
+            self.host_tier.move_to_end(key)
+        else:
+            self._consume_entry(key)
+        return True
+
+    def _swap_in_k_half(self, key: int, slot: int, block_pos: int,
+                        now: float) -> bool:
+        """K-early prefetch restore: ship only the K half now, commit the
+        block with ``v_pending`` set, and pin the host V half so it
+        survives until the block is acquired (V then streams on demand
+        via :meth:`_acquire`) or evicted."""
+        e = self.host_tier.get(key)
+        if e is None or not e.complete:
+            return False
+        if self.swap_in_fn is not None and e.k.data is not None:
+            self.swap_in_fn(slot, (e.k, None))
+        self.bytes_swapped_in_k += e.k.nbytes
+        self.commit(slot, key, block_pos)
+        self.blocks[slot].v_pending = True
+        self._host_pinned[key] = slot
+        self.host_tier.move_to_end(key)
+        self.n_swap_ins += 1
+        self.n_k_early_prefetches += 1
         return True
 
     # ------------------------------------------------------------------
@@ -535,7 +817,7 @@ class BlockManager:
                 self.prefetch_slots[slot] = owner
                 self.n_prefetch_pins += 1
                 out["pinned"] += 1
-            elif h in self.host_tier:
+            elif self._host_complete(h):
                 host_wanted.append((b, h))
             else:
                 self.n_prefetch_misses += 1
@@ -547,7 +829,9 @@ class BlockManager:
                 out["alloc_failed"] += 1
                 continue
             slot = fresh[0]
-            if not self.swap_in(h, slot, b, now):
+            restore = (self._swap_in_k_half
+                       if self.offload.k_early_prefetch else self.swap_in)
+            if not restore(h, slot, b, now):
                 # this loop's own allocations spill evictions into the
                 # host LRU, which may have pushed h out since pass 1 —
                 # degrade to recompute, exactly like the admission path

@@ -66,6 +66,36 @@ class CostModel:
     def log_block_cost(self, pos_tokens: int, block_size: int) -> float:
         return math.log(self.block_cost(pos_tokens, block_size))
 
+    # -- §4 swap-vs-recompute, extended with per-half byte costs -------------
+    def swap_latency(self, nbytes: float, bw: float) -> float:
+        """Host<->device transfer time of an ``nbytes`` payload over a
+        ``bw`` bytes/sec link (PCIe in the paper's §7 hierarchy)."""
+        return nbytes / max(bw, 1e-12)
+
+    def half_offload_gain(self, pos_tokens: int, block_size: int,
+                          half_bytes: float, bw: float) -> float:
+        """Per-half extension of the §4 swap-vs-recompute decision:
+        value of keeping ONE half (K or V) of a block at position
+        ``pos_tokens`` host-resident.  Restoring the half over the link
+        costs ``swap_latency``; not having it means recomputing the
+        block, whose Eq. 7 cost splits evenly across the two halves.
+        Positive gain => hosting the half beats recomputing it, so the
+        over-budget drop policy keeps the K half of deep-position
+        blocks (whose recompute cost grows with position) and sheds
+        shallow ones entirely."""
+        return self.block_cost(pos_tokens, block_size) / 2.0 \
+            - self.swap_latency(half_bytes, bw)
+
+    def restore_cost(self, pos_tokens: int, block_size: int,
+                     resident_bytes: float, bw: float) -> float:
+        """Cost of bringing a host-complete block back to the device:
+        the cheaper of recomputing it (Eq. 7) and swapping its resident
+        payload back in.  Used by the opt-in ``swap_aware_eviction``
+        weighting so the device evictor prefers victims whose restore
+        is cheap *either* way."""
+        return min(self.block_cost(pos_tokens, block_size),
+                   self.swap_latency(resident_bytes, bw))
+
     # -- simple chunk-latency helper for the scheduler/simulator -------------
     def chunk_latency(self, new_tokens: int, context_tokens: int) -> float:
         """Latency of prefilling ``new_tokens`` on top of ``context_tokens``."""

@@ -182,29 +182,36 @@ def sharded_msa_fused(q, k_pool, v_pool, k_new, v_new, write_slot,
       context_lens, q_pos, seq_ids)
 
 
-def sharded_pool_ops(k_pools, v_pools, swap_dst, swap_k, swap_v,
-                     copy_src, copy_dst, *, mesh, axis: str = "model"):
+def sharded_pool_ops(k_pools, v_pools, swap_k_dst, swap_v_dst,
+                     swap_k, swap_v, copy_src, copy_dst, *, mesh,
+                     axis: str = "model"):
     """Per-shard in-step page maintenance on the full (L, P, ...) pools.
 
-    ``swap_dst``/``copy_src``/``copy_dst`` are (n, S) / (n, C) int32 in
-    shard-LOCAL page indices (row i = shard i's queue; padding: swap dst
-    == P_loc, copies repeat the last real local pair or the identity
-    0 -> 0).  ``swap_k``/``swap_v`` are (n, L, S, page, KH, D) payloads
-    sharded on the leading shard axis.  Cross-shard copies cannot be
-    expressed here — the engine routes them through its eager fallback."""
+    ``swap_k_dst``/``swap_v_dst``/``copy_src``/``copy_dst`` are (n, S) /
+    (n, C) int32 in shard-LOCAL page indices (row i = shard i's queue;
+    padding: swap dst == P_loc, copies repeat the last real local pair
+    or the identity 0 -> 0).  The K and V swap halves carry independent
+    destination buckets (split residency: a V-only swap-in ships no K
+    payload).  ``swap_k``/``swap_v`` are (n, L, S, page, KH, D) payloads
+    sharded on the leading shard axis (full precision only — quantized
+    payloads require the single-device engine).  Cross-shard copies
+    cannot be expressed here — the engine routes them through its eager
+    fallback."""
     from repro.kernels.msa.ops import apply_page_copies, apply_swap_ins
 
     pool_spec = P(None, axis, None, None, None)
     swap_spec = P(axis, None, None, None, None, None)
 
-    def local_fn(k, v, sd, sk, sv, cs, cd):
+    def local_fn(k, v, skd, svd, sk, sv, cs, cd):
         i = jax.lax.axis_index(axis)
-        k, v = apply_swap_ins(k, v, sd[i], sk[0], sv[0])
+        k, v = apply_swap_ins(k, v, skd[i], svd[i], sk[0], sv[0])
         k, v = apply_page_copies(k, v, cs[i], cd[i])
         return k, v
 
     return shard_map(
         local_fn, mesh=mesh,
-        in_specs=(pool_spec, pool_spec, P(), swap_spec, swap_spec, P(), P()),
+        in_specs=(pool_spec, pool_spec, P(), P(), swap_spec, swap_spec,
+                  P(), P()),
         out_specs=(pool_spec, pool_spec), check_rep=False,
-    )(k_pools, v_pools, swap_dst, swap_k, swap_v, copy_src, copy_dst)
+    )(k_pools, v_pools, swap_k_dst, swap_v_dst, swap_k, swap_v,
+      copy_src, copy_dst)

@@ -139,13 +139,39 @@ def apply_page_copies(k_pools: jax.Array, v_pools: jax.Array,
     return k_pools, v_pools
 
 
+def _dequant_payload(payload: jax.Array, scale, dtype) -> jax.Array:
+    """In-step dequantization of a (L, S, page, KH, D) swap payload.
+    int8 codes carry a per-page-per-head (L, S, KH) scale; fp8 payloads
+    just cast.  The f32 multiply matches the host-side
+    ``offload.dequantize_half`` operand order exactly, so eager and
+    in-step swap-ins reproduce identical pool bytes."""
+    if scale is not None:
+        out = payload.astype(jnp.float32) * scale[:, :, None, :, None]
+        return out.astype(dtype)
+    if payload.dtype != dtype:
+        return payload.astype(dtype)
+    return payload
+
+
 def apply_swap_ins(k_pools: jax.Array, v_pools: jax.Array,
-                   swap_dst: jax.Array,
-                   swap_k: jax.Array, swap_v: jax.Array):
+                   swap_k_dst: jax.Array, swap_v_dst: jax.Array,
+                   swap_k: jax.Array, swap_v: jax.Array,
+                   swap_k_scale=None, swap_v_scale=None):
     """Host-tier swap-ins: scatter (L, S, page, KH, D) payloads into pool
-    pages ``swap_dst`` (S,), padding steered out of range and dropped."""
-    if swap_dst.shape[0] == 0:
-        return k_pools, v_pools
-    k_pools = k_pools.at[:, swap_dst].set(swap_k, mode="drop")
-    v_pools = v_pools.at[:, swap_dst].set(swap_v, mode="drop")
+    pages, padding steered out of range and dropped.
+
+    The K and V halves carry INDEPENDENT destination buckets
+    (``swap_k_dst`` / ``swap_v_dst``, each (S,)): a V-only swap-in (the
+    k-early prefetch's on-demand V stream) ships no K payload at all
+    instead of a zero page.  Quantized payloads (int8 codes + scale, or
+    fp8) dequantize here, inside the jitted step — the host->device
+    transfer carries the compressed bytes."""
+    if swap_k_dst.shape[0] > 0:
+        k_pools = k_pools.at[:, swap_k_dst].set(
+            _dequant_payload(swap_k, swap_k_scale, k_pools.dtype),
+            mode="drop")
+    if swap_v_dst.shape[0] > 0:
+        v_pools = v_pools.at[:, swap_v_dst].set(
+            _dequant_payload(swap_v, swap_v_scale, v_pools.dtype),
+            mode="drop")
     return k_pools, v_pools

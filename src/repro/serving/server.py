@@ -35,6 +35,7 @@ from repro.core import (
     CostModel,
     FreqParams,
     LifespanTracker,
+    OffloadConfig,
     analytic_cost_model,
     chain_hash,
     hash_seed,
@@ -153,6 +154,10 @@ class ServerConfig:
     # tier of this many blocks (0 = off); swap-in replaces recomputation
     host_blocks: int = 0
     pcie_bw: float = 1.2e10             # bytes/s host<->device for swaps
+    # asymmetric K/V offload policy: split-half residency, quantized swap
+    # payloads, keep-K drop policy, k-early prefetch (core/offload.py).
+    # The default config reproduces the symmetric fp swap path exactly.
+    offload: OffloadConfig = field(default_factory=OffloadConfig)
     # overlapped execution: how many dispatched steps may be awaiting
     # retirement.  0 = fully synchronous (current order preserved for A/B
     # and losslessness tests); 1 = schedule/assemble step N+1 while step N
@@ -190,11 +195,22 @@ class AsymCacheServer:
         policy = make_policy(scfg.policy, self.freq,
                              **({"use_hit_count": scfg.use_hit_count}
                                 if scfg.policy.startswith("asymcache") else {}))
+        # per-half byte sizes: one (L, page, KH, D) half in pool precision
+        # (the host-tier BYTE budget unit) and in the configured wire
+        # format (what a spill actually moves)
+        fp_half = (cfg.n_layers * scfg.block_size
+                   * max(cfg.n_kv_heads, 1) * cfg.head_dim
+                   * np.dtype(cfg.dtype).itemsize)
+        wire_half = int(fp_half * scfg.offload.payload_ratio)
         self.bm = BlockManager(scfg.num_blocks, scfg.block_size, policy,
                                self.cost_model, self.freq,
                                host_blocks=scfg.host_blocks,
                                prefix_sharing=scfg.prefix_sharing,
-                               n_shards=scfg.n_shards)
+                               n_shards=scfg.n_shards,
+                               offload=scfg.offload,
+                               block_bytes=(fp_half, fp_half),
+                               payload_half_bytes=(wire_half, wire_half),
+                               pcie_bw=scfg.pcie_bw)
         self.sched = ChunkingScheduler(scfg.scheduler, self.bm)
         if scfg.execute_model:
             ecfg = ecfg or EngineConfig(
@@ -203,6 +219,17 @@ class AsymCacheServer:
                 max_prefills=scfg.scheduler.max_prefills,
                 max_decodes=scfg.scheduler.max_decodes,
                 attn_mode=scfg.attn_mode)
+            if scfg.offload.quant != "off":
+                # quantized payload serving: the engine snaps KV writes to
+                # the grid (lossless mode) and dequantizes wire payloads
+                # inside the jitted step
+                assert scfg.n_shards == 1, \
+                    "quantized swap payloads require single-device serving"
+                import dataclasses
+                ecfg = dataclasses.replace(
+                    ecfg, swap_payload=scfg.offload.wire_format,
+                    snap=scfg.offload.snap,
+                    snap_scale=scfg.offload.clip / 127.0)
             mesh = None
             if scfg.n_shards > 1:
                 from repro.launch.mesh import make_serving_mesh
@@ -220,9 +247,12 @@ class AsymCacheServer:
             # a queued COW copy / host-tier swap-in targets ONE step
             # boundary's pool state — k-step plans wait for empty queues
             self.sched.pending_ops_fn = lambda: bool(
-                self.engine._pending_copies or self.engine._pending_swaps)
+                self.engine._pending_copies or self.engine._pending_swap_k
+                or self.engine._pending_swap_v)
             if scfg.host_blocks > 0:
-                self.bm.swap_out_fn = lambda slot: self.engine.swap_out(slot)
+                self.bm.swap_out_fn = \
+                    lambda slot, need_k=True, need_v=True: \
+                    self.engine.swap_out(slot, need_k, need_v)
                 self.bm.swap_in_fn = lambda slot, pl: \
                     self.engine.queue_swap_in(slot, pl)
         else:
@@ -296,7 +326,12 @@ class AsymCacheServer:
         if self.sched.swaps_this_round:
             blk_bytes = (2 * self.cfg.n_layers * self.scfg.block_size
                          * max(self.cfg.n_kv_heads, 1) * self.cfg.head_dim * 2)
-            lat += self.sched.swaps_this_round * blk_bytes / self.scfg.pcie_bw
+            # quantized wire payloads move proportionally fewer bytes per
+            # swapped block (payload_ratio = 1.0 keeps the fp billing
+            # bit-identical to the pre-offload model clock)
+            lat += self.sched.swaps_this_round * cm.swap_latency(
+                blk_bytes * self.scfg.offload.payload_ratio,
+                self.scfg.pcie_bw)
         return lat
 
     # ------------------------------------------------------------------
@@ -409,6 +444,10 @@ class AsymCacheServer:
             "prefix_matches": self.bm.n_prefix_matches,
             "sim_time": self.now,
         })
+        # host-tier offload accounting (per-half byte movement + residency
+        # + drop counters) — always present, zeros when host_blocks == 0,
+        # so result-schema consumers never need key-existence checks
+        out.update(self.bm.counters())
         out.update(self.bm.prefetch_counters())
         # per-structure control-plane op counts (treap rotations, trie
         # walks, evictor re-ranks) — the stress benchmark divides these

@@ -5,6 +5,7 @@ import math
 import random
 
 import jax
+import numpy as np
 import pytest
 
 from repro.configs import get_config, get_smoke_config, scaled_config
@@ -342,13 +343,21 @@ def test_swap_out_returns_queued_payload(small_model):
     cfg, params = small_model
     srv = _real_server(cfg, params, num_blocks=32, host_blocks=8)
     eng = srv.engine
-    marker = ("k-payload", "v-payload")
-    eng.queue_swap_in(3, marker)
-    assert eng.swap_out(3) is marker
-    assert eng._pending_swaps == []
-    # with nothing queued, swap_out reads the real pool page
+    mk = np.arange(3.0, dtype=np.float32)
+    mv = np.arange(5.0, dtype=np.float32)
+    eng.queue_swap_in(3, (mk, mv))
     k, v = eng.swap_out(3)
-    assert k.shape[0] == cfg.n_layers
+    assert k.data is mk and v.data is mv      # the queued halves come back
+    assert eng._pending_swap_k == [] and eng._pending_swap_v == []
+    # with nothing queued, swap_out reads the real pool pages
+    k, v = eng.swap_out(3)
+    assert k.shape[0] == cfg.n_layers and v.shape[0] == cfg.n_layers
+    # per-half spill: a half the host tier already holds is neither read
+    # nor shipped, but BOTH queues are still purged (clean-spill path)
+    eng.queue_swap_in(3, (mk, mv))
+    k, v = eng.swap_out(3, need_k=False, need_v=True)
+    assert k is None and v.data is mv
+    assert eng._pending_swap_k == [] and eng._pending_swap_v == []
 
 
 # ---------------------------------------------------------------------------

@@ -35,6 +35,7 @@ ENGINE_COUNTER_KEYS = frozenset({
     "eager_copies",
     "instep_swaps",
     "eager_swaps",
+    "swap_bytes_shipped",
     "engine_dispatches",
     "decode_only_dispatches",
     "decode_tokens_emitted",
@@ -57,6 +58,7 @@ MONOTONIC_KEYS = (
     "eager_copies",
     "instep_swaps",
     "eager_swaps",
+    "swap_bytes_shipped",
 )
 
 # the sim engine mirrors this subset so stress-benchmark gates read the
@@ -79,6 +81,27 @@ CONTROL_PLANE_KEYS = frozenset({
     "evictor_reranks",
     "trie_nodes_visited",
     "pin_heap_ops",
+})
+
+# frozen key set of BlockManager.counters() — the asymmetric-offload
+# accounting serve() merges verbatim into every result dict, and what
+# benchmarks/offload.py's bytes-moved gates read
+BM_COUNTER_KEYS = frozenset({
+    "swap_ins",
+    "swap_outs",
+    "evictions",
+    "bytes_swapped_in_k",
+    "bytes_swapped_in_v",
+    "bytes_swapped_out_k",
+    "bytes_swapped_out_v",
+    "host_resident_bytes",
+    "host_entries",
+    "n_host_evictions",
+    "n_host_half_drops",
+    "clean_half_spills",
+    "v_half_streams",
+    "k_early_prefetches",
+    "pending_purges",
 })
 
 
@@ -166,6 +189,33 @@ def test_sim_engine_counter_parity():
     pc = eng.perf_counters()
     assert set(pc) == SIM_ENGINE_KEYS
     assert SIM_ENGINE_KEYS <= ENGINE_COUNTER_KEYS
+
+
+def test_bm_counter_schema_and_server_result(served):
+    """BlockManager.counters() keys are frozen, and every server result —
+    host tier on or off — carries them (zeros, never missing), so the
+    offload benchmark's counter gates can't silently go vacuous."""
+    srv, _ = served
+    bc = srv.bm.counters()
+    assert set(bc) == BM_COUNTER_KEYS
+    for key in BM_COUNTER_KEYS:
+        assert isinstance(bc[key], int) and bc[key] >= 0, key
+
+    cfg = get_config("llama31-8b")
+    cm = analytic_cost_model(cfg, H20)
+    for host_blocks in (0, 64):
+        scfg = ServerConfig(
+            policy="asymcache", num_blocks=128, block_size=BLOCK,
+            clock="model", execute_model=False, host_blocks=host_blocks,
+            scheduler=SchedulerConfig(token_budget=256, max_chunk=96,
+                                      max_prefills=2, max_decodes=8))
+        sim = AsymCacheServer(cfg, None, scfg, cost_model=cm,
+                              sim_cost_model=cm)
+        res = sim.run(decode_burst_workload(n_requests=6, seed=5))
+        assert BM_COUNTER_KEYS <= set(res)
+        if host_blocks == 0:
+            assert res["bytes_swapped_out_k"] == 0
+            assert res["host_entries"] == 0
 
 
 def test_control_plane_counts_schema():
