@@ -1,0 +1,251 @@
+"""Chaos soak: deterministic fault injection across the serving stack,
+gated on graceful degradation (docs/SERVING.md "Failure semantics").
+
+Two parts, both reproducible from a fixed FaultPlan seed:
+
+  1. **Real-engine A/B.**  The same closed-loop agent sessions served
+     (a) fault-free and (b) with a seeded FaultPlan firing every site —
+     host-tier payload loss (retried, then §4 lossless recompute), host
+     entry corruption (checksum-rejected at acquire), pool OOM at
+     admission (defer/rollback), device dispatch failure (exact rollback
+     + bounded backoff), request-source exceptions (skipped poll), and a
+     throwing ``on_token`` callback (terminal for its request only).
+     Gates: >= 5 distinct sites fire; zero crashes; every request of
+     every UNAFFECTED session is byte-identical to the fault-free run
+     (prompts, teacher-forced outputs AND device greedy samples);
+     invariants audited after every fault and at drain with zero leaked
+     blocks/pins; retries bounded; ``jit_traces == len(buckets_used)``
+     under injection.
+
+  2. **Sim control-plane scenario.**  Structured admission rejection of
+     a request that can never fit (``status="rejected"`` with
+     required/available blocks) and a per-request deadline abort through
+     the cancel machinery — everyone else finishes, the pool drains.
+
+    PYTHONPATH=src:. python -m benchmarks.run --only chaos_soak
+    PYTHONPATH=src:. python benchmarks/chaos_soak.py --smoke  # CI gate
+"""
+from __future__ import annotations
+
+import argparse
+from collections import defaultdict
+
+from benchmarks.common import Rows, write_bench_json
+
+BLOCK = 16
+
+
+def _mk_server(cfg, params, num_blocks: int, host_blocks: int,
+               faults=None, audit_every: int = 0):
+    from repro.serving import (AsymCacheServer, EngineConfig,
+                               SchedulerConfig, ServerConfig)
+    scfg = ServerConfig(
+        policy="asymcache", num_blocks=num_blocks, block_size=BLOCK,
+        clock="model", host_blocks=host_blocks, faults=faults,
+        audit_every=audit_every,
+        scheduler=SchedulerConfig(token_budget=160, max_chunk=96,
+                                  max_prefills=2, max_decodes=8))
+    ecfg = EngineConfig(num_pages=num_blocks, page_size=BLOCK,
+                        max_prefills=2, max_chunk=96, max_decodes=8,
+                        max_blocks_per_seq=32, max_instep_swaps=4)
+    return AsymCacheServer(cfg, params, scfg, ecfg=ecfg)
+
+
+def _acfg(n_jobs: int, seed: int):
+    from repro.serving import AgenticConfig
+    # sized for the smoke model's 32-page tables: max history ~500 tokens
+    return AgenticConfig(
+        n_jobs=n_jobs, seed=seed, tool_calls_per_job=(2, 4),
+        system_prefix_len=32, task_len=(32, 64), tool_result_len=(16, 48),
+        output_len=(12, 24), tool_duration=(0.6, 1.5), qps=2.0)
+
+
+def _jit_ok(srv) -> bool:
+    return srv.engine.jit_traces == len(srv.engine.buckets_used)
+
+
+def _drain_leaks(srv):
+    """(leaked_refs, queued_copies, live_pins) after a completed run."""
+    bm = srv.bm
+    bm.check_invariants()
+    leaked = sum(1 for b in bm.blocks if b.ref_count > 0)
+    pins = sum(1 for b in bm.blocks
+               if b.ref_count == 0 and b.key is not None
+               and b.pinned_until > srv.now)
+    return leaked, len(bm.pending_copies), pins
+
+
+def _turn_table(sessions):
+    out = defaultdict(list)
+    for s in sessions:
+        for r in s.requests:
+            out[s.sid].append(
+                (r.prompt_tokens, r.generated, r.sampled_ids))
+    return out
+
+
+def _sim_scenario(seed: int):
+    """Rejection + deadline degradation in the discrete-event server."""
+    from repro.configs import get_config
+    from repro.core import H20, analytic_cost_model
+    from repro.serving import (AsymCacheServer, Request, SchedulerConfig,
+                               ServerConfig, multi_turn_workload)
+    from repro.serving.workload import WorkloadConfig
+    cfg = get_config("llama31-8b")
+    cm = analytic_cost_model(cfg, H20)
+    scfg = ServerConfig(
+        policy="asymcache", num_blocks=64, block_size=BLOCK,
+        clock="model", execute_model=False, audit_every=8,
+        scheduler=SchedulerConfig(token_budget=192, max_chunk=96,
+                                  max_prefills=2, max_decodes=16))
+    srv = AsymCacheServer(cfg, None, scfg, cost_model=cm, sim_cost_model=cm)
+    wl = multi_turn_workload(WorkloadConfig(
+        n_sessions=4, turns_per_session=(2, 3), system_prefix_len=32,
+        first_ctx_len=(64, 160), user_len=(16, 48), output_len=(12, 32),
+        vocab=5000, qps=4.0, cv=0.25, intra_ratio=0.5, seed=seed))
+    # a request that can NEVER fit the 64-block pool -> structured reject
+    giant = Request(rid=10_000, session_id=9_999,
+                    prompt_tokens=list(range(70 * BLOCK)),
+                    output_script=[1, 2, 3], arrival=0.4, hash_salt=9_999)
+    # a hopelessly tight per-request deadline -> abort via cancel path
+    victim = max(wl, key=lambda r: r.target_len)
+    victim.deadline = victim.arrival + 1e-3
+    res = srv.run(wl + [giant])
+    return srv, res, giant, victim, len(wl)
+
+
+def main(smoke: bool = False, seed: int = 11) -> Rows:
+    import jax
+    from repro.configs import get_smoke_config, scaled_config
+    from repro.core import FaultPlan
+    from repro.models import init_params
+    from repro.serving import (FrontendConfig, OnlineFrontend,
+                               SessionState, agentic_session_scripts)
+
+    cfg = scaled_config(get_smoke_config("llama31-8b"), dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rows = Rows()
+
+    n_jobs = 5 if smoke else 8
+    nb, hb = (40, 24) if smoke else (48, 32)
+    acfg = _acfg(n_jobs=n_jobs, seed=seed)
+    sink = lambda req, tok: None      # noqa: E731 — arms the callback site
+
+    # ---- fault-free baseline (pressure + host tier, demand swap-ins) --
+    srv_base = _mk_server(cfg, params, nb, hb)
+    fe_base = OnlineFrontend(srv_base, agentic_session_scripts(acfg),
+                             FrontendConfig(prefetch=False), on_token=sink)
+    res_base = fe_base.run()
+    base_turns = _turn_table(fe_base.sessions)
+
+    # ---- same sessions under a seeded all-site fault plan -------------
+    # deterministic early armings for every site (an `at` schedule fires
+    # regardless of how injection itself perturbs later timing), plus a
+    # background loss rate for soak coverage of the retry path
+    plan = FaultPlan(
+        seed=seed,
+        rates={"swap_in_loss": 0.2},
+        at={"swap_in_loss": {1}, "host_corrupt": {2},
+            "admission_oom": {3}, "dispatch_fail": {5},
+            # late enough that the failed session has already generated
+            # the memory pressure the host-tier sites need to arm
+            "source_error": {8}, "on_token_error": {150}})
+    srv_f = _mk_server(cfg, params, nb, hb, faults=plan, audit_every=8)
+    fe_f = OnlineFrontend(srv_f, agentic_session_scripts(acfg),
+                          FrontendConfig(prefetch=False), on_token=sink)
+    res_f = fe_f.run()
+
+    failed_sids = {s.sid for s in fe_f.sessions
+                   if s.state is SessionState.FAILED}
+    chaos_turns = _turn_table(fe_f.sessions)
+    identical = all(base_turns[sid] == chaos_turns[sid]
+                    for sid in base_turns if sid not in failed_sids)
+    sites = res_f["fault_sites_fired"]
+    leaked, copies, pins = _drain_leaks(srv_f)
+    jit_ok = _jit_ok(srv_base) and _jit_ok(srv_f)
+    retries_bounded = (res_f["swap_in_retries"]
+                       <= srv_f.bm.swap_retry_limit
+                       * res_f["faults_fired_swap_in_loss"])
+
+    rows.add("chaos_soak/sites_fired", len(sites), ";".join(sites))
+    rows.add("chaos_soak/faults_fired_total", res_f["faults_fired_total"],
+             f"armed_swap_in={res_f['faults_armed_swap_in_loss']};"
+             f"losses={res_f['swap_in_losses']};"
+             f"corruptions={res_f['host_corruptions']};"
+             f"dispatch_retries={res_f['n_dispatch_retries']};"
+             f"source_errors={res_f['n_source_errors']}")
+    rows.add("chaos_soak/unaffected_byte_identity", int(identical),
+             f"failed_sessions={len(failed_sids)};"
+             f"turns={sum(len(v) for v in chaos_turns.values())}")
+    rows.add("chaos_soak/drain_leaks", leaked + copies + pins,
+             f"audits={res_f['invariant_audits']};jit_ok={jit_ok}")
+
+    # ---- sim scenario: structured rejection + deadline abort ----------
+    srv_s, res_s, giant, victim, n_wl = _sim_scenario(seed)
+    s_leaked, s_copies, s_pins = _drain_leaks(srv_s)
+    rows.add("chaos_soak/sim/rejected", res_s["n_rejected"],
+             f"reason={giant.failure['reason']};"
+             f"required={giant.failure['required_blocks']};"
+             f"available={giant.failure['available_blocks']}")
+    rows.add("chaos_soak/sim/deadline_aborts", res_s["n_deadline_aborts"],
+             f"victim_status={victim.status};finished={res_s['n_requests']}")
+
+    write_bench_json("chaos_soak", {
+        "smoke": smoke, "seed": seed,
+        "fault_sites_fired": sites,
+        "fault_log": plan.log,
+        "counters": {k: res_f[k] for k in (
+            "faults_fired_total", "faults_armed_swap_in_loss",
+            "faults_armed_host_corrupt",
+            "swap_in_losses", "swap_in_retries",
+            "host_corruptions", "invariant_audits", "n_failed",
+            "n_rejected", "n_on_token_errors", "n_source_errors",
+            "n_dispatch_retries")},
+        "unaffected_byte_identity": identical,
+        "failed_sessions": sorted(failed_sids),
+        "drain": {"leaked_refs": leaked, "queued_copies": copies,
+                  "live_pins": pins},
+        "jit_traces_equals_buckets_used": jit_ok,
+        "baseline": {k: res_base[k] for k in (
+            "n_turns", "n_jobs", "swap_ins", "faults_fired_total")
+            if k in res_base},
+        "sim_scenario": {
+            "n_rejected": res_s["n_rejected"],
+            "n_deadline_aborts": res_s["n_deadline_aborts"],
+            "n_finished": res_s["n_requests"],
+            "giant_failure": giant.failure,
+            "victim_failure": victim.failure,
+            "drain": {"leaked_refs": s_leaked, "queued_copies": s_copies,
+                      "live_pins": s_pins},
+        },
+    })
+
+    # ---- deterministic gates ------------------------------------------
+    assert len(sites) >= 5, \
+        f"expected >= 5 distinct fault sites to fire, got {sites}"
+    assert res_f["drained"] and res_base["drained"]
+    assert identical, \
+        "a fault leaked into an unaffected session's outputs"
+    assert res_f["invariant_audits"] > 0, "no invariant audits ran"
+    assert leaked == copies == pins == 0, \
+        f"drain leaked: refs={leaked} copies={copies} pins={pins}"
+    assert retries_bounded, "swap-in retry budget exceeded"
+    assert res_f["n_on_token_errors"] == 1 and len(failed_sids) == 1, \
+        "the injected callback fault must fail exactly one session"
+    assert jit_ok, "fault injection grew the jit cache off-lattice"
+    # sim scenario: degraded, not crashed
+    assert res_s["n_rejected"] >= 1 and giant.status == "rejected"
+    assert giant.failure["required_blocks"] > \
+        giant.failure["available_blocks"]
+    assert res_s["n_deadline_aborts"] == 1 and victim.status == "failed"
+    assert res_s["n_requests"] == n_wl - 1    # everyone else finished
+    assert s_leaked == s_copies == s_pins == 0
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config; same deterministic gates")
+    a = ap.parse_args()
+    main(smoke=a.smoke).emit()

@@ -16,6 +16,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   (ours)      sharded_serving    N-way sequence-sharded engine vs single
   §6.5/§8     agentic_online     closed-loop Continuum frontend + prefetch
   (ours)      control_plane_stress  k-step decode dispatch + 5k-session O(·)
+  (ours)      chaos_soak         fault injection + graceful degradation
 """
 import argparse
 import sys
@@ -40,6 +41,7 @@ MODULES = [
     ("sharded_serving", {}),
     ("agentic_online", {}),
     ("control_plane_stress", {}),
+    ("chaos_soak", {}),
 ]
 
 

@@ -28,6 +28,7 @@ from repro.core.evictor import (
     PensieveEvictor,
     make_policy,
 )
+from repro.core.faults import FAULT_SITES, FaultPlan, InjectedFault
 from repro.core.freq import EwmaCounter, FreqParams
 from repro.core.lifespan import LifespanTracker, ResumePredictor
 from repro.core.offload import (
@@ -35,8 +36,10 @@ from repro.core.offload import (
     HostHalf,
     OffloadConfig,
     dequantize_half,
+    half_checksum,
     quantize_half,
     snap_to_grid_np,
+    verify_half,
 )
 from repro.core.prefix_trie import PrefixMatch, PrefixTrie
 from repro.core.treap import Treap
@@ -52,5 +55,7 @@ __all__ = [
     "EwmaCounter", "FreqParams", "LifespanTracker", "ResumePredictor",
     "Treap",
     "HostEntry", "HostHalf", "OffloadConfig",
-    "dequantize_half", "quantize_half", "snap_to_grid_np",
+    "dequantize_half", "half_checksum", "quantize_half",
+    "snap_to_grid_np", "verify_half",
+    "FAULT_SITES", "FaultPlan", "InjectedFault",
 ]

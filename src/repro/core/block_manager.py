@@ -45,9 +45,11 @@ import numpy as np
 
 from repro.core.cost_model import CostModel
 from repro.core.evictor import EvictableMeta, EvictionPolicy
+from repro.core.faults import FaultPlan
 from repro.core.freq import EwmaCounter, FreqParams
 from repro.core.offload import (HostEntry, HostHalf, OffloadConfig,
-                                ScaleCache, quantize_half)
+                                ScaleCache, half_checksum, quantize_half,
+                                verify_half)
 from repro.core.prefix_trie import PrefixTrie
 
 
@@ -115,7 +117,8 @@ class BlockManager:
                  offload: Optional[OffloadConfig] = None,
                  block_bytes: Optional[Tuple[int, int]] = None,
                  payload_half_bytes: Optional[Tuple[int, int]] = None,
-                 pcie_bw: float = 1.2e10):
+                 pcie_bw: float = 1.2e10,
+                 faults: Optional[FaultPlan] = None):
         self.num_blocks = num_blocks
         self.block_size = block_size
         # ---- KV sharding (sharded serving engine): the device page pool
@@ -216,6 +219,19 @@ class BlockManager:
         self.n_pin_heap_ops = 0
         # evictable-set re-ranks forced by set_boost (§5.2 suspend boost)
         self.n_evictor_reranks = 0
+        # ---- fault injection + graceful degradation (core/faults.py):
+        # lost or corrupt host payloads degrade to the §4 lossless
+        # recompute path; payload checksums are computed at spill and
+        # verified at acquire whenever a plan is attached (or forced via
+        # offload.verify_payloads); every injected fault is followed by a
+        # full invariant audit.
+        self.faults = faults
+        self._checksums = faults is not None or self.offload.verify_payloads
+        self.swap_retry_limit = 3       # bounded retry on transient loss
+        self.n_swap_in_losses = 0       # payload lost beyond all retries
+        self.n_swap_in_retries = 0      # transient losses retried away
+        self.n_host_corruptions = 0     # checksum mismatches at acquire
+        self.n_invariant_audits = 0
         # stats
         self.n_lookups = 0
         self.n_hits = 0
@@ -521,23 +537,32 @@ class BlockManager:
         idx = 0 if which == "k" else 1
         fmt = self.offload.wire_format
         if isinstance(raw, HostHalf):
-            return raw
+            return self._seal_half(raw)
         if raw is None:
-            return HostHalf(data=None, scale=None,
-                            nbytes=self._wire_half_bytes[idx], fmt=fmt)
+            return self._seal_half(HostHalf(
+                data=None, scale=None,
+                nbytes=self._wire_half_bytes[idx], fmt=fmt))
         arr = np.asarray(raw)
         if fmt != "q8":
-            return quantize_half(arr, fmt)
+            return self._seal_half(quantize_half(arr, fmt))
         if self.offload.lossy_offload:
             # exact-requantization bookkeeping: restored content re-spills
             # with its remembered scale, recovering identical codes
             hh = quantize_half(arr, "q8",
                                scale=self._scales.get(key, which))
             self._scales.put(key, which, hh.scale)
-            return hh
+            return self._seal_half(hh)
         # lossless: pool values were snapped to this static grid at write
         # time, so the round-trip is exact by construction
-        return quantize_half(arr, "q8", static_scale=self._grid_scale)
+        return self._seal_half(
+            quantize_half(arr, "q8", static_scale=self._grid_scale))
+
+    def _seal_half(self, hh: HostHalf) -> HostHalf:
+        """Stamp a spilled half with its payload checksum (verified again
+        at acquire) when payload verification is active."""
+        if self._checksums and hh.checksum is None:
+            hh.checksum = half_checksum(hh)
+        return hh
 
     def _consume_entry(self, key: int) -> None:
         """Remove a host entry that was swapped back in (not an LRU drop)."""
@@ -738,6 +763,8 @@ class BlockManager:
         e = self.host_tier.get(key)
         if e is None or not e.complete:
             return False
+        if not self._survive_acquire(key, e):
+            return False
         if self.swap_in_fn is not None and \
                 (e.k.data is not None or e.v.data is not None):
             self.swap_in_fn(slot, (e.k, e.v))
@@ -760,6 +787,8 @@ class BlockManager:
         e = self.host_tier.get(key)
         if e is None or not e.complete:
             return False
+        if not self._survive_acquire(key, e):
+            return False
         if self.swap_in_fn is not None and e.k.data is not None:
             self.swap_in_fn(slot, (e.k, None))
         self.bytes_swapped_in_k += e.k.nbytes
@@ -770,6 +799,164 @@ class BlockManager:
         self.n_swap_ins += 1
         self.n_k_early_prefetches += 1
         return True
+
+    # ------------------------------------------------------------------
+    # fault injection + graceful degradation (core/faults.py)
+    # ------------------------------------------------------------------
+    def _survive_acquire(self, key: int, e: HostEntry) -> bool:
+        """Host-payload fault gauntlet at acquire time.  Returning False
+        degrades to the §4 lossless recompute path (the caller leaves
+        the block as a gap, exactly like a host-tier miss):
+
+        * ``swap_in_loss`` — payload lost in transit.  Transient: the
+          read is retried up to ``swap_retry_limit`` times (each retry
+          re-arms the site, so a persistent fault keeps firing); a loss
+          that survives every retry drops the entry and misses.
+        * ``host_corrupt`` — the stored payload is flipped, then the
+          normal checksum verification (active whenever checksums are)
+          catches the mismatch: the entry is dropped and the block
+          recomputed rather than serving corrupt KV bytes.
+        """
+        if self.faults is not None:
+            lost = self.faults.should_fire("swap_in_loss")
+            tries = 0
+            while lost and tries < self.swap_retry_limit:
+                tries += 1
+                self.n_swap_in_retries += 1
+                lost = self.faults.should_fire("swap_in_loss")
+            if lost:
+                self.n_swap_in_losses += 1
+                self._consume_entry(key)
+                self.audit_after_fault()
+                return False
+            if self.faults.should_fire("host_corrupt"):
+                self._corrupt_entry(e)
+        if self._checksums and not (verify_half(e.k) and verify_half(e.v)):
+            self.n_host_corruptions += 1
+            self._consume_entry(key)
+            self.audit_after_fault()
+            return False
+        return True
+
+    @staticmethod
+    def _corrupt_entry(e: HostEntry) -> None:
+        """Flip one payload byte of the entry (simulated payloads flip
+        the stored checksum instead) so verification must reject it."""
+        hh = e.k if e.k is not None else e.v
+        if hh.data is not None:
+            hh.data = hh.data.copy()
+            hh.data.view(np.uint8).reshape(-1)[0] ^= 0xFF
+        else:
+            hh.checksum = (hh.checksum or 0) ^ 0x1
+
+    def drop_copies_to(self, slots, now: float) -> int:
+        """Cancel queued copy-on-write copies into ``slots`` (a failed or
+        cancelled request's pages): the dst is about to be released, so
+        draining the copy later would scatter into a reallocated page.
+        Donor refs are dropped here.  Returns copies cancelled."""
+        targets = set(slots)
+        kept: List[Tuple[int, int]] = []
+        dropped = 0
+        for src, dst in self.pending_copies:
+            if dst in targets:
+                self.release([src], now)
+                dropped += 1
+            else:
+                kept.append((src, dst))
+        self.pending_copies = kept
+        return dropped
+
+    def audit_after_fault(self) -> None:
+        """Run the full invariant audit right after an injected fault —
+        every fault site calls this, so a chaos run that corrupts the
+        accounting fails loudly at the fault, not at drain."""
+        if self.faults is not None:
+            self.check_invariants()
+
+    def check_invariants(self) -> Dict[str, int]:
+        """Audit the cross-structure accounting and raise AssertionError
+        on any violation.  The partition invariant: every pool slot is
+        in exactly one of {free list, evictable set, referenced
+        (ref_count > 0), pinned-resident at refcount 0}; the hash table
+        is a bijection onto committed resident blocks; host-tier byte
+        accounting matches the entries; k-early pins point at v_pending
+        blocks whose host V half survives.  Runnable every
+        ``audit_every`` steps (ServerConfig) and after every injected
+        fault; returns the partition census."""
+        self.n_invariant_audits += 1
+        free = set(self.free)
+        assert len(free) == len(self.free), "duplicate slots on free list"
+        n_referenced = n_evictable = n_pinned0 = 0
+        for blk in self.blocks:
+            assert blk.ref_count >= 0, (blk.slot, blk.ref_count)
+            in_policy = blk.slot in self.policy
+            if blk.slot in free:
+                assert blk.ref_count == 0 and blk.key is None \
+                    and not in_policy, f"free slot {blk.slot} still live"
+                continue
+            if in_policy:
+                assert blk.ref_count == 0 and blk.key is not None, \
+                    f"evictable slot {blk.slot} referenced or uncommitted"
+                n_evictable += 1
+            elif blk.ref_count > 0:
+                n_referenced += 1
+            else:
+                # resident at refcount 0 outside the evictable set: only
+                # a pin (live, or expired awaiting its lazy sweep) may
+                # hold a block there
+                assert blk.key is not None and \
+                    blk.pinned_until > -math.inf, \
+                    f"slot {blk.slot} leaked (ref 0, unpinned, not free)"
+                n_pinned0 += 1
+            if blk.key is not None:
+                assert self.table.get(blk.key) == blk.slot, \
+                    f"slot {blk.slot} committed but not in table"
+            if blk.v_pending:
+                assert blk.key is not None \
+                    and blk.key in self._host_pinned, \
+                    f"v_pending slot {blk.slot} without host pin"
+        assert len(free) + n_referenced + n_evictable + n_pinned0 \
+            == self.num_blocks, "slot partition does not cover the pool"
+        for key, slot in self.table.items():
+            assert self.blocks[slot].key == key, \
+                f"table maps {key} to slot {slot} holding other content"
+        total = sum(e.nbytes for e in self.host_tier.values())
+        assert total == self.host_resident_bytes, \
+            (total, self.host_resident_bytes)
+        if self.host_blocks > 0:
+            pinned_bytes = sum(
+                self.host_tier[k].nbytes
+                for k in self._host_pinned if k in self.host_tier)
+            assert self.host_resident_bytes \
+                <= self._host_budget + pinned_bytes, \
+                "host tier over budget beyond pinned halves"
+        for key, slot in self._host_pinned.items():
+            blk = self.blocks[slot]
+            assert blk.key == key and blk.v_pending, \
+                f"host pin {key} -> slot {slot} out of sync"
+            assert self._host_has(key, "v"), \
+                f"pinned host V half for {key} vanished"
+        for slot in self.prefetch_slots:
+            assert self.blocks[slot].key is not None, \
+                f"prefetch slot {slot} uncommitted"
+        for src, _dst in self.pending_copies:
+            assert self.blocks[src].ref_count > 0, \
+                f"pending copy source {src} unreferenced"
+        assert all(0 <= u <= self.shard_size
+                   for u in self.per_shard_used()), \
+            "per-shard occupancy out of range (free slot outside pool?)"
+        return {"free": len(free), "referenced": n_referenced,
+                "evictable": n_evictable, "pinned_ref0": n_pinned0}
+
+    def fault_counters(self) -> Dict[str, int]:
+        """Degradation accounting, merged into every server result
+        (separate from the frozen :meth:`counters` schema)."""
+        return {
+            "swap_in_losses": self.n_swap_in_losses,
+            "swap_in_retries": self.n_swap_in_retries,
+            "host_corruptions": self.n_host_corruptions,
+            "invariant_audits": self.n_invariant_audits,
+        }
 
     # ------------------------------------------------------------------
     # predictive host-tier prefetch (online session serving / Continuum)

@@ -44,6 +44,7 @@ exactness regimes:
 """
 from __future__ import annotations
 
+import zlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
@@ -93,6 +94,10 @@ class OffloadConfig:
     swap_aware_eviction: bool = False
     # remembered per-key payload scales (lossy mode requant exactness)
     scale_cache: int = 4096
+    # checksum every spilled half at encode time and re-verify at
+    # acquire (always on when a FaultPlan is attached; this flag forces
+    # it on for fault-free runs too)
+    verify_payloads: bool = False
 
     @property
     def snap(self) -> str:
@@ -127,11 +132,36 @@ class HostHalf:
     codes (``fmt="q8"``, with ``scale`` of shape (L, KH)), an fp8
     ndarray (``fmt="f8"``), or None in discrete-event simulation —
     ``nbytes`` then carries the *configured* half size so byte
-    accounting stays exact without materializing payloads."""
+    accounting stays exact without materializing payloads.
+
+    ``checksum`` is a CRC32 over the wire payload, computed at spill
+    time when payload verification is active (a fault plan is attached
+    or ``OffloadConfig.verify_payloads`` is set) and re-checked at
+    acquire; ``None`` means unverified."""
     data: Optional[np.ndarray]
     scale: Optional[np.ndarray]
     nbytes: int
     fmt: str = "fp"
+    checksum: Optional[int] = None
+
+
+def half_checksum(half: HostHalf) -> int:
+    """CRC32 of a wire half's payload bytes (0 for simulated payloads,
+    where ``data is None`` and only byte accounting exists)."""
+    c = 0
+    if half.data is not None:
+        c = zlib.crc32(np.ascontiguousarray(half.data).view(np.uint8), c)
+    if half.scale is not None:
+        c = zlib.crc32(np.ascontiguousarray(half.scale).view(np.uint8), c)
+    return c
+
+
+def verify_half(half: Optional[HostHalf]) -> bool:
+    """True iff the half's stored checksum (if any) matches its
+    payload — a missing half or an unverified half passes."""
+    if half is None or half.checksum is None:
+        return True
+    return half_checksum(half) == half.checksum
 
 
 @dataclass

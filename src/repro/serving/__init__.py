@@ -1,6 +1,11 @@
 from repro.serving.engine import Engine, EngineConfig, StepHandle
 from repro.serving.frontend import FrontendConfig, OnlineFrontend
-from repro.serving.request import Request, RequestState, SessionStats
+from repro.serving.request import (
+    TERMINAL_STATES,
+    Request,
+    RequestState,
+    SessionStats,
+)
 from repro.serving.scheduler import (
     ChunkingScheduler,
     PrefillChunk,
@@ -36,7 +41,7 @@ from repro.serving.workload import (
 
 __all__ = [
     "Engine", "EngineConfig", "StepHandle", "Request", "RequestState",
-    "SessionStats",
+    "SessionStats", "TERMINAL_STATES",
     "ChunkingScheduler", "PrefillChunk", "SchedulerConfig", "StepPlan",
     "AsymCacheServer", "ScriptedSource", "ServerConfig", "reference_logits",
     "FrontendConfig", "OnlineFrontend",

@@ -50,6 +50,10 @@ from repro.serving.sessions import (
 )
 from repro.serving.workload import SessionScript
 
+#: session states past which no event for the session may fire
+_TERMINAL = (SessionState.FINISHED, SessionState.CANCELLED,
+             SessionState.FAILED)
+
 
 @dataclass
 class FrontendConfig:
@@ -111,8 +115,7 @@ class OnlineFrontend:
         self.heap_ops += 1
 
     def _prune(self) -> None:
-        while self._heap and self._heap[0][3].state in (
-                SessionState.FINISHED, SessionState.CANCELLED):
+        while self._heap and self._heap[0][3].state in _TERMINAL:
             heapq.heappop(self._heap)
             self.heap_ops += 1
 
@@ -133,7 +136,7 @@ class OnlineFrontend:
         while self._heap and self._heap[0][0] <= now:
             when, _, kind, sess, turn = heapq.heappop(self._heap)
             self.heap_ops += 1
-            if sess.state in (SessionState.FINISHED, SessionState.CANCELLED):
+            if sess.state in _TERMINAL:
                 continue
             if kind == "prefetch":
                 if self._pf_due(sess, turn):
@@ -180,6 +183,22 @@ class OnlineFrontend:
                        turn=sess.turn_idx)
         self._push(sess.resume_at, "arrival", sess)
 
+    def _on_failure(self, req: Request, now: float) -> None:
+        """Server-side terminal fault (FAILED/REJECTED): the server has
+        already released every block the turn owned; the job is over.
+        Pending heap events for the session are discarded lazily by
+        ``_prune``/``pop_due`` exactly like a cancellation."""
+        sess = self._by_sid.get(req.session_id)
+        if sess is None or sess.current is not req:
+            return                       # not one of this frontend's turns
+        self.telemetry.record_turn(req)
+        if self.fcfg.prefetch and sess.computed_tokens:
+            self.server.bm.cancel_prefetch(
+                self.server.bm.block_hashes(sess.computed_tokens),
+                now, owner=sess.sid)
+        sess.fail(now)
+        self.telemetry.record_job(sess)
+
     def _do_prefetch(self, sess: AgentSession, now: float) -> None:
         sess.state = SessionState.PREFETCHING
         hashes = self.server.bm.block_hashes(sess.computed_tokens)
@@ -194,8 +213,7 @@ class OnlineFrontend:
         immediately), drops the resume pins of anything prefetched for
         it, and lazily discards its pending events."""
         sess = self._by_sid.get(sid)
-        if sess is None or sess.state in (SessionState.FINISHED,
-                                          SessionState.CANCELLED):
+        if sess is None or sess.state in _TERMINAL:
             return False
         req = sess.current
         # a suspended session's current request already finished (and was
@@ -221,10 +239,12 @@ class OnlineFrontend:
         self.server.sched.cfg.admission = self.fcfg.admission
         self.server.uses_pins = True     # prefetch pins need expiry sweeps
         self.server.finish_listeners.append(self._on_finish)
+        self.server.failure_listeners.append(self._on_failure)
         try:
             res = self.server.serve(self, max_steps=max_steps)
         finally:
             self.server.finish_listeners.remove(self._on_finish)
+            self.server.failure_listeners.remove(self._on_failure)
             self.server.sched.cfg.admission = prev_admission
             self.server.uses_pins = prev_pins
         res.update(self.telemetry.summary())

@@ -24,6 +24,21 @@ class RequestState(enum.Enum):
     # aborted by the client (online frontend): blocks released immediately,
     # no stats recorded, the request never re-enters scheduling
     CANCELLED = 4
+    # terminal fault domain (docs/SERVING.md "Failure semantics"):
+    # FAILED  — the request's own machinery faulted (throwing on_token
+    #           callback, deadline exceeded); everything it owned is
+    #           released and the loop keeps serving everyone else
+    # REJECTED — refused at admission with a structured reason
+    #           (``Request.failure``): e.g. it can never fit the pool
+    FAILED = 5
+    REJECTED = 6
+
+
+#: states a request can never leave (scheduling ignores them)
+TERMINAL_STATES = frozenset({
+    RequestState.FINISHED, RequestState.CANCELLED,
+    RequestState.FAILED, RequestState.REJECTED,
+})
 
 
 @dataclass
@@ -53,7 +68,12 @@ class Request:
     # emitted output token (the teacher-forced token, at the step that
     # dispatched it — device-side greedy samples arrive one step later in
     # ``sampled_ids``).  May call ``AsymCacheServer.cancel`` to abort.
+    # An exception escaping the callback is isolated to this request
+    # (terminal ``failed`` status), never to the serve loop.
     on_token: Optional[object] = None
+    # absolute-clock deadline: past it the server aborts the request
+    # through the cancel machinery (terminal ``failed``/``deadline``)
+    deadline: float = math.inf
 
     # -- runtime state ------------------------------------------------------
     state: RequestState = RequestState.WAITING
@@ -88,6 +108,20 @@ class Request:
     n_prefill_compute: int = 0  # prompt positions actually (re)computed
     # logits at prefill completion (losslessness validation)
     first_logits: Optional[object] = None
+    # structured terminal-fault result: {"status": "failed"|"rejected",
+    # "reason": ..., + site-specific fields such as required_blocks /
+    # available_blocks}; None for every other outcome
+    failure: Optional[Dict] = None
+
+    @property
+    def terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
+
+    @property
+    def status(self) -> str:
+        """Lowercase terminal/most-recent state name (the ``status``
+        field of the structured per-request result)."""
+        return self.state.name.lower()
 
     @property
     def all_tokens(self) -> List[int]:

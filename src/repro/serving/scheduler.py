@@ -130,6 +130,13 @@ class ChunkingScheduler:
     def submit(self, req: Request) -> None:
         self.waiting.append(req)
 
+    def required_blocks(self, req: Request) -> int:
+        """Pool blocks the request needs end-to-end (prompt + decode),
+        before cache hits — the admission sizing and the ``required``
+        field of a structured rejection."""
+        bs = self.cfg.block_size
+        return (req.target_len + bs - 1) // bs
+
     def _admit(self, req: Request, now: float) -> bool:
         """Match cache, allocate ALL blocks up front, build compute list.
 
@@ -152,10 +159,16 @@ class ChunkingScheduler:
         m = self.bm.match(req.prompt_tokens, now, hashes=hashes)  # acquires hits
         total_blocks = (req.target_len + bs - 1) // bs
         needed = total_blocks - m.num_hits
-        fresh = self.bm.allocate(needed, now)
+        # pool-OOM fault site: an injected allocation failure takes the
+        # exact deferral path a genuinely exhausted pool takes
+        injected_oom = (needed > 0 and self.bm.faults is not None
+                        and self.bm.faults.should_fire("admission_oom"))
+        fresh = None if injected_oom else self.bm.allocate(needed, now)
         if fresh is None:
             # undo: drop the acquired hit references, stay waiting
             self.bm.release([s for s in m.hit_slots if s is not None], now)
+            if injected_oom:
+                self.bm.audit_after_fault()
             return False
         it = iter(fresh)
         req.block_slots = [
@@ -413,17 +426,29 @@ class ChunkingScheduler:
         writer is ordered after it by the pipeline's data dependency) but
         the request never enters another plan.  Returns False when the
         request already finished or was never submitted."""
-        if req.state in (RequestState.FINISHED, RequestState.CANCELLED):
+        return self.remove(req, now, RequestState.CANCELLED)
+
+    def remove(self, req: Request, now: float,
+               state: RequestState) -> bool:
+        """Terminal removal shared by cancellation and the per-request
+        fault domain: take the request out of scheduling, release every
+        block reference it owns, cancel any still-queued copy-on-write
+        copies INTO its pages (their dst is about to be reallocatable —
+        draining them later would scatter into someone else's block) and
+        land it in ``state`` (CANCELLED / FAILED / REJECTED)."""
+        if req.terminal:
             return False
         if req in self.waiting:
             self.waiting.remove(req)
-            req.state = RequestState.CANCELLED
+            req.state = state
             req.finished_at = now
             return True
         if req not in self.running:
             return False
         self.running.remove(req)
-        self.bm.release([s for s in req.block_slots if s is not None], now)
-        req.state = RequestState.CANCELLED
+        slots = [s for s in req.block_slots if s is not None]
+        self.bm.drop_copies_to(slots, now)
+        self.bm.release(slots, now)
+        req.state = state
         req.finished_at = now
         return True

@@ -22,6 +22,7 @@ so their logits and sampled ids match byte-for-byte.
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -33,7 +34,9 @@ from repro.configs.base import ModelConfig
 from repro.core import (
     BlockManager,
     CostModel,
+    FaultPlan,
     FreqParams,
+    InjectedFault,
     LifespanTracker,
     OffloadConfig,
     analytic_cost_model,
@@ -44,6 +47,14 @@ from repro.core import (
 from repro.serving.engine import Engine, EngineConfig, StepHandle
 from repro.serving.request import Request, RequestState, SessionStats
 from repro.serving.scheduler import ChunkingScheduler, SchedulerConfig, StepPlan
+
+# graceful-degradation bounds (docs/SERVING.md "Failure semantics"):
+# all-idle admission retries before the head-of-line request is rejected,
+# consecutive dispatch failures before the loop gives up, and consecutive
+# request-source exceptions before the source's error is re-raised
+STALL_RETRY_LIMIT = 64
+DISPATCH_RETRY_LIMIT = 8
+SOURCE_ERROR_LIMIT = 100
 
 
 class _SimEngine:
@@ -177,6 +188,17 @@ class ServerConfig:
     n_shards: int = 1
     scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
     use_hit_count: bool = True
+    # ---- fault injection + graceful degradation (core/faults.py) ----
+    # seeded chaos schedule consulted at the named fault sites; None =
+    # fault-free serving (zero overhead: no checksums, no audits)
+    faults: Optional[FaultPlan] = None
+    # strict=True preserves the historical fail-fast behaviour: a request
+    # that can never fit the pool raises out of serve() instead of being
+    # rejected with a structured reason (tests opt in)
+    strict: bool = False
+    # run BlockManager.check_invariants() every N dispatched steps
+    # (0 = only after injected faults / at drain when a plan is attached)
+    audit_every: int = 0
 
 
 class AsymCacheServer:
@@ -210,7 +232,8 @@ class AsymCacheServer:
                                offload=scfg.offload,
                                block_bytes=(fp_half, fp_half),
                                payload_half_bytes=(wire_half, wire_half),
-                               pcie_bw=scfg.pcie_bw)
+                               pcie_bw=scfg.pcie_bw,
+                               faults=scfg.faults)
         self.sched = ChunkingScheduler(scfg.scheduler, self.bm)
         if scfg.execute_model:
             ecfg = ecfg or EngineConfig(
@@ -270,6 +293,20 @@ class AsymCacheServer:
         # pins need it even when continuum_ttl is off)
         self.finish_listeners: List = []
         self.uses_pins = scfg.continuum_ttl
+        # per-request fault domains: listeners fire with (request, now)
+        # when a request lands in a terminal FAILED/REJECTED state (the
+        # online frontend uses this to retire the owning session)
+        self.failure_listeners: List = []
+        self.n_failed = 0
+        self.n_rejected = 0
+        self.n_deadline_aborts = 0
+        self.n_on_token_errors = 0
+        self.n_source_errors = 0
+        self.n_dispatch_retries = 0
+        self._has_deadlines = False
+        self._stall_retries = 0
+        self._dispatch_failures = 0      # consecutive
+        self._consec_source_errors = 0
 
     # ------------------------------------------------------------------
     def _hashes_for(self, req: Request, n_blocks: int):
@@ -360,15 +397,33 @@ class AsymCacheServer:
         depth = max(0, int(self.scfg.pipeline_depth))
         inflight: Deque[Tuple[StepPlan, StepHandle]] = deque()
         steps = 0
+        faults = self.scfg.faults
         t_run0 = time.perf_counter()
         t_last_dispatch = t_run0
 
         while (not source.done() or self.sched.waiting
                or self.sched.running) and steps < max_steps:
             # admit arrivals due by now (closed-loop sources also fire
-            # their due prefetches inside pop_due)
-            for req in source.pop_due(self.now):
+            # their due prefetches inside pop_due).  A throwing source
+            # (real or injected) degrades to a skipped poll, retried next
+            # iteration, instead of killing the loop mid-pipeline; a
+            # persistently-broken source re-raises after the bound.
+            try:
+                if faults is not None and faults.should_fire("source_error"):
+                    raise InjectedFault("source_error")
+                due = source.pop_due(self.now)
+            except Exception:
+                self.n_source_errors += 1
+                self._consec_source_errors += 1
+                if self._consec_source_errors > SOURCE_ERROR_LIMIT:
+                    raise
+                self.bm.audit_after_fault()
+                due = []
+            else:
+                self._consec_source_errors = 0
+            for req in due:
                 self._on_arrival(req)
+            self._sweep_deadlines()
 
             if self.uses_pins:
                 self.bm.unpin_expired(self.now)
@@ -388,10 +443,48 @@ class AsymCacheServer:
                         self.now = expiry
                         self.bm.unpin_expired(self.now)
                         continue
-                    raise RuntimeError(
-                        "KV pool too small for a single waiting request "
-                        f"({self.scfg.num_blocks} blocks)")
+                    if self.scfg.strict:
+                        raise RuntimeError(
+                            "KV pool too small for a single waiting request "
+                            f"({self.scfg.num_blocks} blocks)")
+                    # nothing runs, nothing will arrive, no pin will
+                    # expire: a transient (injected) admission fault
+                    # clears on retry; a genuinely stuck head-of-line
+                    # request is rejected with a structured reason and
+                    # the loop keeps serving everyone else
+                    self._stall_retries += 1
+                    if self._stall_retries <= STALL_RETRY_LIMIT:
+                        continue
+                    self._stall_retries = 0
+                    head = self.sched.waiting[0]
+                    self._reject(head, "pool_exhausted",
+                                 required=self.sched.required_blocks(head),
+                                 available=self.bm.num_free())
+                    continue
                 break
+            self._stall_retries = 0
+
+            # device step-dispatch fault site: injected BEFORE the COW
+            # drain, so nothing has entered the device and rollback is
+            # exact — un-consume the prefill chunks and retry the very
+            # same step with backoff (bounded by DISPATCH_RETRY_LIMIT)
+            if faults is not None and faults.should_fire("dispatch_fail"):
+                self.n_dispatch_retries += 1
+                self._dispatch_failures += 1
+                if self._dispatch_failures > DISPATCH_RETRY_LIMIT:
+                    raise RuntimeError(
+                        "persistent device dispatch failure "
+                        f"({self._dispatch_failures} consecutive)")
+                for chunk in plan.prefills:
+                    if chunk.req.state is RequestState.PREFILL:
+                        chunk.req.compute_ptr -= len(chunk.positions)
+                if self.scfg.clock == "model":
+                    # linear backoff in model time before the retry
+                    self.now += self.sim_cost_model.beta \
+                        * self._dispatch_failures
+                self.bm.audit_after_fault()
+                continue
+            self._dispatch_failures = 0
 
             # copy-on-write forks queued during admission are folded into
             # the step about to be dispatched — they land before its
@@ -421,6 +514,9 @@ class AsymCacheServer:
                 self.now += t_now - t_last_dispatch
             t_last_dispatch = time.perf_counter()
             steps += 1
+            if self.scfg.audit_every \
+                    and steps % self.scfg.audit_every == 0:
+                self.bm.check_invariants()
 
             self._postprocess(plan)
             inflight.append((plan, handle))
@@ -430,6 +526,19 @@ class AsymCacheServer:
         while inflight:                # drain the pipeline
             self._retire(*inflight.popleft())
         wall = time.perf_counter() - t_run0
+
+        # serve-drain audit: after a natural drain (every request reached
+        # a terminal state) nothing may still hold a block reference or a
+        # queued page copy, and the cross-structure accounting must be
+        # clean — leaks fail HERE, not silently degrade forever
+        drained = (source.done() and not self.sched.waiting
+                   and not self.sched.running)
+        if drained and (faults is not None or self.scfg.audit_every):
+            self.bm.check_invariants()
+            leaked = [b.slot for b in self.bm.blocks if b.ref_count > 0]
+            assert not leaked, f"blocks leaked at drain: {leaked}"
+            assert not self.bm.pending_copies, \
+                "queued COW copies leaked at drain"
 
         out = self.stats.summary()
         out.update({
@@ -460,11 +569,116 @@ class AsymCacheServer:
         # deterministic hot-path accounting (fused-dispatch + occupancy
         # buckets; empty for the simulated engine)
         out.update(self.engine.perf_counters())
+        # failure-semantics accounting: terminal fault-domain counts +
+        # degradation counters, and the fault plan's armed/fired tallies
+        # when one is attached (all zeros on a fault-free run)
+        out.update({
+            "n_failed": self.n_failed,
+            "n_rejected": self.n_rejected,
+            "n_deadline_aborts": self.n_deadline_aborts,
+            "n_on_token_errors": self.n_on_token_errors,
+            "n_source_errors": self.n_source_errors,
+            "n_dispatch_retries": self.n_dispatch_retries,
+            "drained": drained,
+        })
+        out.update(self.bm.fault_counters())
+        if self.scfg.faults is not None:
+            out.update(self.scfg.faults.counts())
+            out["fault_sites_fired"] = self.scfg.faults.sites_fired()
         return out
 
     # ------------------------------------------------------------------
     def _on_arrival(self, req: Request) -> None:
+        if req.deadline < math.inf:
+            self._has_deadlines = True
+        if not self.scfg.strict:
+            # a request that can NEVER fit the pool is refused up front
+            # with a structured reason instead of wedging the queue
+            required = self.sched.required_blocks(req)
+            if required > self.scfg.num_blocks:
+                self._reject(req, "request_exceeds_pool",
+                             required=required,
+                             available=self.scfg.num_blocks)
+                return
         self.sched.submit(req)
+
+    # ------------------------------------------------------------------
+    # per-request fault domains (docs/SERVING.md "Failure semantics")
+    # ------------------------------------------------------------------
+    def _sweep_deadlines(self) -> None:
+        """Abort every waiting/running request whose deadline has passed
+        — through the shared cancel machinery, so blocks/pins release
+        exactly as a client cancellation would release them."""
+        if not self._has_deadlines:
+            return
+        expired = [r for r in self.sched.waiting if self.now > r.deadline]
+        expired += [r for r in self.sched.running if self.now > r.deadline]
+        for req in expired:
+            self.n_deadline_aborts += 1
+            self._fail_request(req, "deadline",
+                               {"deadline": req.deadline,
+                                "aborted_at": self.now})
+
+    def _fail_request(self, req: Request, reason: str,
+                      detail: Optional[Dict] = None,
+                      state: RequestState = RequestState.FAILED) -> bool:
+        """Land ``req`` in a terminal FAILED/REJECTED state: release
+        every block/pin/copy it owns (via the scheduler's shared
+        terminal-removal path), purge any swap-in halves still queued
+        for its pages, record the structured failure, and notify the
+        failure listeners.  The loop keeps serving everyone else."""
+        if req.terminal:
+            return False
+        if req in self.sched.running and self.bm.swap_out_fn is not None:
+            # an injected dispatch failure may have skipped the step that
+            # would have consumed this request's queued swap-in halves;
+            # purge them BEFORE the pages become reallocatable so a later
+            # step can't scatter stale payload into someone else's block
+            for s in req.block_slots:
+                if s is not None:
+                    self.bm.swap_out_fn(s, False, False)
+        if not self.sched.remove(req, self.now, state):
+            # never submitted (arrival-time rejection): no scheduler or
+            # pool state to unwind, just mark it terminal
+            req.state = state
+            req.finished_at = self.now
+        req.failure = {"status": req.status, "reason": reason,
+                       **(detail or {})}
+        if state is RequestState.REJECTED:
+            self.n_rejected += 1
+        else:
+            self.n_failed += 1
+        for fn in self.failure_listeners:
+            fn(req, self.now)
+        return True
+
+    def _reject(self, req: Request, reason: str, required: int,
+                available: int) -> bool:
+        """Structured admission rejection: terminal ``rejected`` status
+        with the blocks the request needed vs. what the pool offers."""
+        return self._fail_request(
+            req, reason,
+            {"required_blocks": required, "available_blocks": available},
+            state=RequestState.REJECTED)
+
+    def _emit_token(self, req: Request) -> None:
+        """Fire the streaming callback inside the owning request's fault
+        domain: an exception (thrown by user code, or injected at the
+        ``on_token_error`` site) fails THIS request — cancel + release —
+        and never escapes into the serve loop.  (It used to propagate
+        out of the pipeline with inflight handles and leaked refcounts.)
+        The callback may still legitimately call :meth:`cancel`."""
+        if req.on_token is None:
+            return
+        faults = self.scfg.faults
+        try:
+            if faults is not None and faults.should_fire("on_token_error"):
+                raise InjectedFault("on_token_error")
+            req.on_token(req, req.generated[-1])
+        except Exception as e:  # noqa: BLE001 — user-code boundary
+            self.n_on_token_errors += 1
+            self._fail_request(req, "on_token_error", {"error": repr(e)})
+            self.bm.audit_after_fault()
 
     def _postprocess(self, plan: StepPlan) -> None:
         """Host-side state update for a *dispatched* step.
@@ -481,8 +695,8 @@ class AsymCacheServer:
         tokens or finish."""
         for r, chunk in enumerate(plan.prefills):
             req = chunk.req
-            if req.state is RequestState.CANCELLED:
-                continue
+            if req.terminal:
+                continue               # cancelled/failed mid-pipeline
             self._commit_ready_blocks(req, int(chunk.positions[-1]) + 1)
             if chunk.completes_prefill:
                 req.state = RequestState.DECODE
@@ -491,8 +705,7 @@ class AsymCacheServer:
                     # prompt is now resident: index it for prefix sharing
                     self.bm.register_prefix(req.prompt_tokens)
                 req.generated.append(int(req.output_script[0]))
-                if req.on_token is not None:
-                    req.on_token(req, req.generated[-1])
+                self._emit_token(req)
                 if req.state is RequestState.DECODE \
                         and len(req.output_script) <= 1:
                     self._finish(req)
@@ -503,14 +716,13 @@ class AsymCacheServer:
             # here by simply not being consumed
             for _ in range(iters[j] if iters else 1):
                 if req.state is not RequestState.DECODE:
-                    break              # cancelled (or already finished)
+                    break    # cancelled/failed (or already finished)
                 p = req.prompt_len + len(req.generated) - 1
                 if (p + 1) % self.scfg.block_size == 0:
                     self._commit_ready_blocks(req, p + 1)
                 req.generated.append(
                     int(req.output_script[len(req.generated)]))
-                if req.on_token is not None:
-                    req.on_token(req, req.generated[-1])
+                self._emit_token(req)
                 if req.state is RequestState.DECODE and req.decode_done:
                     self._finish(req)
                     break

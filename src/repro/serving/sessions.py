@@ -43,6 +43,9 @@ class SessionState(enum.Enum):
     PREFETCHING = 3   # predictive restore issued, resume pin in force
     FINISHED = 4
     CANCELLED = 5
+    # terminal fault domain: the session's in-flight turn FAILED or was
+    # REJECTED (see RequestState) — the job is over, everything released
+    FAILED = 6
 
 
 class AgentSession:
@@ -131,6 +134,10 @@ class AgentSession:
         self.state = SessionState.CANCELLED
         self.finished_at = now
 
+    def fail(self, now: float) -> None:
+        self.state = SessionState.FAILED
+        self.finished_at = now
+
 
 # ---------------------------------------------------------------------------
 # telemetry
@@ -179,10 +186,19 @@ class OnlineTelemetry:
     recompute_tokens: int = 0          # ... across all turns
     cancelled_turns: int = 0
     cancelled_jobs: int = 0
+    failed_turns: int = 0         # on_token fault / deadline abort
+    rejected_turns: int = 0       # structured admission rejection
+    failed_jobs: int = 0
 
     def record_turn(self, req: Request) -> None:
         if req.state is RequestState.CANCELLED:
             self.cancelled_turns += 1
+            return
+        if req.state is RequestState.FAILED:
+            self.failed_turns += 1
+            return
+        if req.state is RequestState.REJECTED:
+            self.rejected_turns += 1
             return
         self.ttfts.append(req.ttft)
         self.tpots.append(req.tpot)
@@ -196,6 +212,9 @@ class OnlineTelemetry:
     def record_job(self, session: AgentSession) -> None:
         if session.state is SessionState.CANCELLED:
             self.cancelled_jobs += 1
+            return
+        if session.state is SessionState.FAILED:
+            self.failed_jobs += 1
             return
         self.job_latencies.append(session.job_latency)
 
@@ -218,6 +237,9 @@ class OnlineTelemetry:
             "recompute_tokens": self.recompute_tokens,
             "cancelled_turns": self.cancelled_turns,
             "cancelled_jobs": self.cancelled_jobs,
+            "failed_turns": self.failed_turns,
+            "rejected_turns": self.rejected_turns,
+            "failed_jobs": self.failed_jobs,
         }
 
     def window_summary(self, first_n: int) -> Dict[str, float]:

@@ -11,6 +11,19 @@ def pytest_configure(config):
         "markers", "slow: multi-device subprocess tests (several minutes)")
 
 
+def assert_drained(srv) -> None:
+    """Shared drain audit: after a serve() run completes, the pool must
+    hold zero leaked references, zero queued copies, and a consistent
+    block-table/host-tier picture (BlockManager.check_invariants)."""
+    bm = srv.bm
+    bm.check_invariants()
+    leaked = [i for i, b in enumerate(bm.blocks) if b.ref_count > 0]
+    assert not leaked, f"leaked block refs at drain: {leaked}"
+    assert not bm.pending_copies, \
+        f"pending COW copies at drain: {bm.pending_copies}"
+    assert not srv.sched.waiting and not srv.sched.running
+
+
 def run_devices(code: str, n_devices: int) -> str:
     """Run ``code`` in a subprocess with ``n_devices`` forced CPU host
     devices (jax locks the device count at first init, and the main

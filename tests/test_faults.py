@@ -1,0 +1,384 @@
+"""Fault injection + graceful degradation (core/faults.py, the server's
+per-request fault domains, and the BlockManager invariant auditor).
+
+Covers: FaultPlan determinism and arming schedules; host-tier payload
+loss and corruption degrading to the §4 lossless recompute fallback
+(bounded retry-with-backoff); pool-OOM at admission riding the existing
+rollback/defer path; device dispatch failure with exact rollback and
+bounded retries; throwing ``on_token`` callbacks isolated to the owning
+request; structured admission rejection (and the ``strict=True`` opt-out
+that preserves the historical raise); per-request deadlines; and
+``check_invariants`` actually detecting a corrupted pool.
+"""
+import math
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    FAULT_SITES,
+    H20,
+    BlockManager,
+    FaultPlan,
+    FreqParams,
+    analytic_cost_model,
+    make_policy,
+)
+from repro.serving import (
+    AgenticConfig,
+    AsymCacheServer,
+    FrontendConfig,
+    OnlineFrontend,
+    RequestState,
+    SchedulerConfig,
+    ServerConfig,
+    SessionState,
+    agentic_session_scripts,
+    multi_turn_workload,
+)
+from repro.serving.workload import WorkloadConfig
+from conftest import assert_drained
+
+BS = 16
+
+ACFG = dict(tool_calls_per_job=(2, 3), system_prefix_len=32,
+            task_len=(32, 64), tool_result_len=(16, 48),
+            output_len=(12, 24), tool_duration=(0.6, 1.5), qps=1.5)
+
+
+def _bm(num_blocks=2, host_blocks=4, faults=None):
+    fp = FreqParams.from_turning_point(10.0)
+    cm = analytic_cost_model(get_config("llama31-8b"))
+    return BlockManager(num_blocks, BS, make_policy("asymcache", fp), cm,
+                        fp, host_blocks=host_blocks, faults=faults)
+
+
+def _commit_release(bm, n, start=0, now=1.0):
+    toks = list(range(start * BS, (start + n) * BS))
+    hashes = bm.block_hashes(toks)
+    slots = bm.allocate(n, now=now)
+    assert slots is not None
+    for i, (s, h) in enumerate(zip(slots, hashes)):
+        bm.commit(s, h, i)
+    bm.release(slots, now=now + 0.5)
+    return slots, hashes, toks
+
+
+def _spilled_bm(faults=None):
+    """A 2-block pool whose 2 committed blocks were evicted to the host
+    tier, with 2 fresh slots held ready for swap-in."""
+    bm = _bm(num_blocks=2, host_blocks=4, faults=faults)
+    _, hashes, _ = _commit_release(bm, 2)
+    ev = bm.allocate(2, now=3.0)               # evicts both -> host tier
+    assert len(bm.host_tier) == 2
+    bm.release(ev, now=3.5)                    # uncommitted -> free
+    back = bm.allocate(2, now=4.0)
+    return bm, hashes, back
+
+
+def _sim_server(num_blocks, host_blocks=0, faults=None, strict=False,
+                audit_every=0):
+    cfg = get_config("llama31-8b")
+    cm = analytic_cost_model(cfg, H20)
+    scfg = ServerConfig(
+        policy="asymcache", num_blocks=num_blocks, block_size=BS,
+        clock="model", execute_model=False, host_blocks=host_blocks,
+        faults=faults, strict=strict, audit_every=audit_every,
+        scheduler=SchedulerConfig(token_budget=192, max_chunk=96,
+                                  max_prefills=2, max_decodes=16))
+    return AsymCacheServer(cfg, None, scfg, cost_model=cm, sim_cost_model=cm)
+
+
+def _wl(n_sessions=4, seed=0, **kw):
+    p = dict(n_sessions=n_sessions, turns_per_session=(2, 3),
+             system_prefix_len=32, first_ctx_len=(64, 160),
+             user_len=(16, 48), output_len=(12, 32), vocab=5000,
+             qps=4.0, cv=0.25, intra_ratio=0.5, seed=seed)
+    p.update(kw)
+    return multi_turn_workload(WorkloadConfig(**p))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: deterministic, schedulable, counted
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_draw_is_process_stable():
+    # string-seeded Random (SHA-512) — NOT Python's salted hash()
+    assert FaultPlan.draw(0, "swap_in_loss", 1) == \
+        FaultPlan.draw(0, "swap_in_loss", 1)
+    assert FaultPlan.draw(0, "swap_in_loss", 1) != \
+        FaultPlan.draw(0, "swap_in_loss", 2)
+    assert FaultPlan.draw(0, "swap_in_loss", 1) != \
+        FaultPlan.draw(1, "swap_in_loss", 1)
+
+
+def test_fault_plan_rate_sequences_reproduce():
+    a = FaultPlan(seed=7, rates={"swap_in_loss": 0.5})
+    b = FaultPlan(seed=7, rates={"swap_in_loss": 0.5})
+    seq = [a.should_fire("swap_in_loss") for _ in range(64)]
+    assert seq == [b.should_fire("swap_in_loss") for _ in range(64)]
+    assert 0 < sum(seq) < 64
+    assert a.log == b.log                     # (site, nth) firing record
+
+
+def test_fault_plan_at_schedule_and_limit():
+    fp = FaultPlan(at={"admission_oom": {2, 4}}, limit=1)
+    fired = [fp.should_fire("admission_oom") for _ in range(5)]
+    assert fired == [False, True, False, False, False]   # limit caps at 1
+    assert fp.armed("admission_oom") == 5
+    assert fp.fired("admission_oom") == 1
+    assert fp.sites_fired() == ["admission_oom"]
+    c = fp.counts()
+    assert c["faults_fired_admission_oom"] == 1
+    assert c["faults_armed_admission_oom"] == 5
+    assert c["faults_fired_total"] == 1
+    assert set(c) == {f"faults_armed_{s}" for s in FAULT_SITES} \
+        | {f"faults_fired_{s}" for s in FAULT_SITES} | {"faults_fired_total"}
+
+
+def test_fault_plan_rejects_unknown_site():
+    with pytest.raises(ValueError):
+        FaultPlan(rates={"bogus": 0.5})
+    with pytest.raises(ValueError):
+        FaultPlan(at={"bogus": {1}})
+    with pytest.raises(ValueError):
+        FaultPlan().should_fire("bogus")
+
+
+# ---------------------------------------------------------------------------
+# host-tier faults: loss -> bounded retry -> recompute; corruption caught
+# ---------------------------------------------------------------------------
+
+def test_swap_in_loss_retry_succeeds():
+    """A transient payload loss is retried (bounded): arming 1 fires,
+    the retry re-arms the site and survives, the acquire completes."""
+    bm, hashes, back = _spilled_bm(FaultPlan(at={"swap_in_loss": {1}}))
+    assert bm.swap_in(hashes[0], back[0], 0, now=4.0)
+    assert bm.n_swap_in_retries == 1
+    assert bm.n_swap_in_losses == 0
+
+
+def test_swap_in_loss_exhausts_retries_then_recomputes():
+    """Armings 1..4 all fire: the retry budget (3) is exhausted, the
+    entry is dropped (it can never be acquired again) and the acquire
+    reports a miss — the §4 lossless fallback recomputes the block."""
+    bm, hashes, back = _spilled_bm(
+        FaultPlan(at={"swap_in_loss": {1, 2, 3, 4}}))
+    assert not bm.swap_in(hashes[0], back[0], 0, now=4.0)
+    assert bm.n_swap_in_losses == 1
+    assert bm.n_swap_in_retries == bm.swap_retry_limit
+    assert hashes[0] not in bm.host_tier       # consumed, not resurrectable
+    assert bm.n_invariant_audits >= 1          # audited after the fault
+    # the sibling entry is untouched and still acquirable
+    assert bm.swap_in(hashes[1], back[1], 1, now=4.1)
+
+
+def test_host_corruption_detected_by_checksum():
+    bm, hashes, back = _spilled_bm(FaultPlan(at={"host_corrupt": {1}}))
+    assert not bm.swap_in(hashes[0], back[0], 0, now=4.0)  # rejected
+    assert bm.n_host_corruptions == 1
+    assert hashes[0] not in bm.host_tier
+    assert bm.swap_in(hashes[1], back[1], 1, now=4.1)      # clean sibling
+    fc = bm.fault_counters()
+    assert fc["host_corruptions"] == 1 and fc["swap_in_losses"] == 0
+
+
+def test_checksums_off_without_faults():
+    """Fault-free serving pays nothing: no checksums are stamped unless
+    a plan is installed or verify_payloads is opted into."""
+    bm, hashes, _ = _spilled_bm(faults=None)
+    e = bm.host_tier[hashes[0]]
+    assert e.k.checksum is None and e.v.checksum is None
+
+
+def test_swap_in_loss_under_serving_is_lossless():
+    """End to end: heavy payload loss under pool pressure degrades to
+    recompute — every request still finishes, nothing leaks."""
+    faults = FaultPlan(seed=3, rates={"swap_in_loss": 0.5})
+    wl = _wl(n_sessions=4, seed=11)
+    srv = _sim_server(num_blocks=48, host_blocks=64, faults=faults,
+                      audit_every=16)
+    res = srv.run(wl)
+    assert res["n_requests"] == len(wl)
+    assert res["drained"]
+    assert faults.fired("swap_in_loss") > 0 or \
+        faults.armed("swap_in_loss") == 0
+    assert_drained(srv)
+
+
+# ---------------------------------------------------------------------------
+# admission OOM + dispatch failure (sim serving)
+# ---------------------------------------------------------------------------
+
+def test_admission_oom_defers_and_recovers():
+    faults = FaultPlan(at={"admission_oom": {1, 3}})
+    wl = _wl(n_sessions=3, seed=2)
+    srv = _sim_server(num_blocks=96, faults=faults)
+    res = srv.run(wl)
+    assert res["n_requests"] == len(wl)       # deferred, never dropped
+    assert faults.fired("admission_oom") == 2
+    assert res["faults_fired_admission_oom"] == 2
+    assert_drained(srv)
+
+
+def test_dispatch_fail_retries_with_backoff():
+    faults = FaultPlan(at={"dispatch_fail": {1, 2}})
+    wl = _wl(n_sessions=3, seed=2)
+    srv = _sim_server(num_blocks=96, faults=faults)
+    res = srv.run(wl)
+    assert res["n_requests"] == len(wl)
+    assert res["n_dispatch_retries"] == 2
+    assert_drained(srv)
+
+
+def test_dispatch_fail_hard_down_raises():
+    """A permanently failing device is NOT degradable: after the bounded
+    consecutive-retry budget the fault surfaces."""
+    faults = FaultPlan(rates={"dispatch_fail": 1.0})
+    wl = _wl(n_sessions=2, seed=4)
+    srv = _sim_server(num_blocks=96, faults=faults)
+    with pytest.raises(RuntimeError, match="persistent device dispatch"):
+        srv.run(wl)
+
+
+def test_source_error_polls_are_skipped():
+    faults = FaultPlan(at={"source_error": {2, 3}})
+    wl = _wl(n_sessions=3, seed=6)
+    srv = _sim_server(num_blocks=96, faults=faults)
+    res = srv.run(wl)
+    assert res["n_requests"] == len(wl)
+    assert res["n_source_errors"] == 2
+    assert_drained(srv)
+
+
+# ---------------------------------------------------------------------------
+# satellite: throwing on_token is isolated to the owning request
+# ---------------------------------------------------------------------------
+
+def test_throwing_on_token_fails_only_its_request():
+    wl = _wl(n_sessions=4, seed=9)
+    victim = wl[0]
+
+    def boom(req, tok):
+        raise RuntimeError("user callback exploded")
+
+    victim.on_token = boom
+    seen = []
+    for r in wl[1:]:
+        r.on_token = lambda req, tok: seen.append((req.rid, tok))
+    srv = _sim_server(num_blocks=256)
+    res = srv.run(wl)
+    assert victim.state is RequestState.FAILED
+    assert victim.status == "failed"
+    assert victim.failure["reason"] == "on_token_error"
+    assert "exploded" in victim.failure["error"]
+    assert res["n_failed"] == 1 and res["n_on_token_errors"] == 1
+    # everyone else streamed + finished normally
+    others = [r for r in wl[1:]]
+    assert all(r.state is RequestState.FINISHED for r in others)
+    assert len(seen) == sum(len(r.generated) for r in others)
+    assert_drained(srv)
+
+
+def test_injected_on_token_error_fails_session(monkeypatch):
+    """Closed loop: an injected callback fault terminally fails the
+    owning session; its pending events drain and the run completes."""
+    faults = FaultPlan(at={"on_token_error": {5}})
+    scripts = agentic_session_scripts(AgenticConfig(n_jobs=3, seed=5,
+                                                    **ACFG))
+    srv = _sim_server(num_blocks=256, faults=faults)
+    fe = OnlineFrontend(srv, scripts, FrontendConfig(prefetch=False),
+                        on_token=lambda req, tok: None)
+    res = fe.run()
+    assert res["n_on_token_errors"] == 1
+    assert res["failed_turns"] == 1 and res["failed_jobs"] == 1
+    assert sum(1 for s in fe.sessions
+               if s.state is SessionState.FAILED) == 1
+    assert sum(1 for s in fe.sessions
+               if s.state is SessionState.FINISHED) == 2
+    assert res["drained"]
+    assert_drained(srv)
+
+
+# ---------------------------------------------------------------------------
+# satellite: structured rejection replaces the bare raise (opt back in
+# with strict=True); per-request deadlines
+# ---------------------------------------------------------------------------
+
+def test_oversized_request_rejected_with_structured_status():
+    wl = _wl(n_sessions=2, seed=1)
+    giant = max(wl, key=lambda r: r.target_len)
+    srv = _sim_server(num_blocks=4)           # 64 tokens: giant can't fit
+    res = srv.run(wl)
+    assert giant.state is RequestState.REJECTED
+    assert giant.status == "rejected"
+    assert giant.failure["reason"] == "request_exceeds_pool"
+    assert giant.failure["required_blocks"] > \
+        giant.failure["available_blocks"] == 4
+    assert res["n_rejected"] >= 1
+    assert_drained(srv)
+
+
+def test_strict_mode_preserves_pool_too_small_raise():
+    wl = _wl(n_sessions=2, seed=1)
+    srv = _sim_server(num_blocks=4, strict=True)
+    with pytest.raises(RuntimeError, match="KV pool too small"):
+        srv.run(wl)
+
+
+def test_deadline_aborts_through_cancel_machinery():
+    wl = _wl(n_sessions=3, seed=8)
+    victim = max(wl, key=lambda r: r.target_len)
+    victim.deadline = victim.arrival + 1e-3   # hopelessly tight
+    srv = _sim_server(num_blocks=256)
+    res = srv.run(wl)
+    assert victim.state is RequestState.FAILED
+    assert victim.failure["reason"] == "deadline"
+    assert res["n_deadline_aborts"] == 1
+    survivors = [r for r in wl if r is not victim]
+    assert all(r.state is RequestState.FINISHED for r in survivors)
+    assert res["n_requests"] == len(survivors)
+    assert_drained(srv)
+
+
+def test_no_deadline_requests_skip_sweep():
+    wl = _wl(n_sessions=2, seed=3)
+    assert all(r.deadline == math.inf for r in wl)
+    srv = _sim_server(num_blocks=256)
+    res = srv.run(wl)
+    assert res["n_deadline_aborts"] == 0
+    assert res["n_requests"] == len(wl)
+
+
+# ---------------------------------------------------------------------------
+# the auditor itself: a corrupted pool must be DETECTED
+# ---------------------------------------------------------------------------
+
+def test_check_invariants_detects_leaked_slot():
+    bm = _bm(num_blocks=4, host_blocks=0)
+    bm.check_invariants()                     # clean pool passes
+    slots = bm.allocate(2, now=1.0)
+    bm.check_invariants()                     # referenced blocks pass
+    # simulate a lost release: the slot drops to ref 0 but never returns
+    # to the free list or the evictable set — a genuine leak
+    bm.blocks[slots[0]].ref_count = 0
+    with pytest.raises(AssertionError):
+        bm.check_invariants()
+
+
+def test_check_invariants_detects_table_desync():
+    bm = _bm(num_blocks=4, host_blocks=0)
+    _commit_release(bm, 2)
+    bm.check_invariants()
+    key = next(iter(bm.table))
+    bm.table[key] = 3 if bm.table[key] != 3 else 2   # point at wrong slot
+    with pytest.raises(AssertionError):
+        bm.check_invariants()
+
+
+def test_check_invariants_detects_host_byte_drift():
+    bm, hashes, _ = _spilled_bm()
+    bm.check_invariants()
+    bm.host_resident_bytes += 1
+    with pytest.raises(AssertionError):
+        bm.check_invariants()

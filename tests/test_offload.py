@@ -33,6 +33,7 @@ from repro.serving import (
     multi_turn_workload,
 )
 from repro.serving.workload import WorkloadConfig
+from conftest import assert_drained
 
 BS = 16
 GRID = 8.0 / 127.0
@@ -331,6 +332,8 @@ def test_quantized_offload_serving_byte_identical(small_model):
     wl_b = multi_turn_workload(WorkloadConfig(**wl_args))
     srv_b = _offload_server(cfg, params, split_off)
     res_b = srv_b.run(wl_b)
+    assert_drained(srv_a)
+    assert_drained(srv_b)
 
     assert res_a["swap_ins"] > 0 and res_b["swap_ins"] == res_a["swap_ins"]
     for a, b in zip(wl_a, wl_b):

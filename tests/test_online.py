@@ -34,6 +34,7 @@ from repro.serving import (
     requests_from_scripts,
 )
 from repro.serving.workload import WorkloadConfig, _gamma_interval
+from conftest import assert_drained
 
 KEY = jax.random.PRNGKey(0)
 
@@ -113,6 +114,7 @@ def test_closed_loop_matches_scripted(small_model):
     srv_a = _real_server(cfg, params)
     wl = requests_from_scripts(agentic_session_scripts(acfg))
     srv_a.run(wl)
+    assert_drained(srv_a)
     by_sid = {}
     for r in sorted(wl, key=lambda r: r.rid):
         by_sid.setdefault(r.session_id, []).append(r)
@@ -121,6 +123,7 @@ def test_closed_loop_matches_scripted(small_model):
     fe = OnlineFrontend(srv_b, agentic_session_scripts(acfg),
                         FrontendConfig(prefetch=False, admission="fcfs"))
     res = fe.run()
+    assert_drained(srv_b)
     assert res["closed_loop"] and res["n_turns"] == len(wl)
 
     for sess in fe.sessions:
@@ -154,6 +157,7 @@ def test_prefetch_eliminates_resume_stalls():
                             FrontendConfig(prefetch=prefetch,
                                            prefetch_lead=0.3))
         res[prefetch] = fe.run()
+        assert_drained(srv)
     on, off = res[True], res[False]
     # the baseline actually stalls (otherwise the gate is vacuous)
     assert off["resume_swap_stalls"] > 0
@@ -393,8 +397,8 @@ def test_cancel_mid_decode_frees_blocks():
         if sess.sid != 2:
             assert sess.state is SessionState.FINISHED
     assert res["cancelled_jobs"] == 1 and res["cancelled_turns"] == 1
-    # refcount baseline: nothing leaked
-    assert all(b.ref_count == 0 for b in srv.bm.blocks)
+    # refcount baseline: nothing leaked (shared drain audit)
+    assert_drained(srv)
 
 
 def test_streaming_callback_sees_every_token():
@@ -408,6 +412,7 @@ def test_streaming_callback_sees_every_token():
     fe = OnlineFrontend(srv, agentic_session_scripts(acfg),
                         FrontendConfig(prefetch=False), on_token=on_token)
     fe.run()
+    assert_drained(srv)
     for sess in fe.sessions:
         for req in sess.requests:
             assert per_rid[req.rid] == req.output_script

@@ -143,6 +143,13 @@ _EQUIV = """
             # compile-once-per-bucket survives shard_map
             assert sn.engine.jit_traces == len(sn.engine.buckets_used), \\
                 (n, depth, sn.engine.jit_traces, sn.engine.buckets_used)
+            # shared drain audit (inlined: conftest is not importable in
+            # the forced-device subprocess)
+            sn.bm.check_invariants()
+            assert all(b.ref_count == 0 for b in sn.bm.blocks)
+            assert not sn.bm.pending_copies
+    s1.bm.check_invariants()
+    assert all(b.ref_count == 0 for b in s1.bm.blocks)
     print("OK")
 """
 
