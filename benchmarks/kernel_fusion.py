@@ -57,9 +57,8 @@ def _mk_workload(n_jobs: int, seed: int):
         tool_duration=(0.2, 0.8), qps=3.0, seed=seed))
 
 
-def _mk_server(cfg, params, mode: str, depth: int = 1):
-    from repro.serving import (AsymCacheServer, EngineConfig,
-                               SchedulerConfig, ServerConfig)
+def _mk_cfgs(mode: str, depth: int = 1):
+    from repro.serving import EngineConfig, SchedulerConfig, ServerConfig
     scfg = ServerConfig(
         policy="asymcache", num_blocks=NUM_BLOCKS, block_size=16,
         clock="model", pipeline_depth=depth, attn_mode=mode,
@@ -69,6 +68,12 @@ def _mk_server(cfg, params, mode: str, depth: int = 1):
     ecfg = EngineConfig(
         num_pages=NUM_BLOCKS, page_size=16, max_prefills=2, max_chunk=96,
         max_decodes=24, max_blocks_per_seq=32, attn_mode=mode)
+    return scfg, ecfg
+
+
+def _mk_server(cfg, params, mode: str, depth: int = 1):
+    from repro.serving import AsymCacheServer
+    scfg, ecfg = _mk_cfgs(mode, depth)
     srv = AsymCacheServer(cfg, params, scfg, ecfg=ecfg)
     srv.run(_mk_workload(1, seed=999))      # compile every hot bucket
     return srv
@@ -135,6 +140,20 @@ def main(smoke: bool = False, n_jobs: int = 10, seed: int = 5) -> Rows:
     speedup = statistics.median(sps_ratios)
     best_speedup = max(sps_ratios)
 
+    # ---- compile-free trace-key prediction (repro.analysis) -----------
+    # replay the fused depth-1 server's full workload sequence on the
+    # simulated control plane; measured jit_traces must equal the
+    # prediction, so compile-once-per-bucket is checked from both sides
+    # of the compile boundary
+    from repro.analysis.lattice import predict_trace_keys
+    scfg_p, ecfg_p = _mk_cfgs("fused", depth=1)
+    predicted = predict_trace_keys(
+        cfg, scfg_p,
+        [_mk_workload(1, 999), _mk_workload(n_jobs, seed),
+         _mk_workload(n_jobs, seed + 1)]
+        + [_mk_workload(n_jobs, seed + 2) for _ in range(segments)],
+        ecfg=ecfg_p)
+
     rows = Rows()
     rows.add("kernel_fusion/split/attn_dispatches_per_step", disp_s,
              f"padded_token_fraction={pad_s:.4f}")
@@ -147,6 +166,8 @@ def main(smoke: bool = False, n_jobs: int = 10, seed: int = 5) -> Rows:
     rows.add("kernel_fusion/steps_per_sec_speedup", speedup,
              f"best={best_speedup:.2f};fused={fused_sps:.1f};"
              f"split={split_sps:.1f}")
+    rows.add("kernel_fusion/jit_traces", srv_fused.engine.jit_traces,
+             f"predicted={len(predicted)}")
 
     write_bench_json("kernel_fusion", {
         "byte_identical": byte_identical,
@@ -157,6 +178,7 @@ def main(smoke: bool = False, n_jobs: int = 10, seed: int = 5) -> Rows:
         "token_buckets": list(srv_fused.engine.token_buckets),
         "np_buckets": list(srv_fused.engine.np_buckets),
         "jit_traces": srv_fused.engine.jit_traces,
+        "jit_traces_predicted": len(predicted),
         "steps_per_sec": {"fused": fused_sps, "split": split_sps},
         "steps_per_sec_speedup_median": speedup,
         "steps_per_sec_speedup_best": best_speedup,
@@ -169,6 +191,14 @@ def main(smoke: bool = False, n_jobs: int = 10, seed: int = 5) -> Rows:
     assert pad_s / max(pad_f, 1e-9) >= 2.0, (
         f"expected >= 2x padded-token-fraction cut, got "
         f"{pad_s:.4f} -> {pad_f:.4f} ({pad_s / max(pad_f, 1e-9):.2f}x)")
+    # compile-once-per-bucket, cross-checked against the static auditor:
+    # the measured jit cache must be exactly the predicted key set
+    eng = srv_fused.engine
+    assert eng.jit_traces == len(eng.buckets_used), \
+        (eng.jit_traces, len(eng.buckets_used))
+    assert sorted(eng.buckets_used) == predicted, (
+        f"measured trace keys {sorted(eng.buckets_used)} != "
+        f"predicted {predicted}")
     return rows
 
 

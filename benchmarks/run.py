@@ -49,8 +49,28 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module names")
+    ap.add_argument("--check", action="store_true",
+                    help="import every module and verify it exposes a "
+                         "callable main(), without running anything — "
+                         "the fast wiring check the analyze CI job runs")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+
+    if args.check:
+        bad = 0
+        for name, _kw in MODULES:
+            if only and name not in only:
+                continue
+            try:
+                mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+                assert callable(getattr(mod, "main", None)), \
+                    f"benchmarks.{name} has no callable main()"
+                print(f"check/{name},ok")
+            except Exception as e:  # noqa: BLE001
+                bad += 1
+                traceback.print_exc(file=sys.stderr)
+                print(f"check/{name},FAILED:{type(e).__name__}")
+        sys.exit(1 if bad else 0)
 
     print("name,us_per_call,derived")
     failures = 0

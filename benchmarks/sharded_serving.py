@@ -136,9 +136,40 @@ def _run_child(n_jobs: int, seed: int) -> dict:
     raise RuntimeError(f"no RESULT line in child output:\n{proc.stdout}")
 
 
+def _predict_trace_keys(n_jobs: int, seed: int):
+    """Compile-free trace-key prediction in the PARENT process (no
+    forced host devices): replay the child's workload on the simulated
+    control plane with the child's exact configs.  The sharded arms pin
+    their plan streams to the single-device reference (bucket_counts
+    equality gate), so one single-device prediction covers every arm.
+    Must mirror ``run()``/``mk_workload()`` inside ``_CHILD``."""
+    from repro.analysis.lattice import predict_trace_keys
+    from repro.configs import get_smoke_config, scaled_config
+    from repro.serving import (AgenticConfig, EngineConfig,
+                               SchedulerConfig, ServerConfig,
+                               agentic_workload)
+    cfg = scaled_config(get_smoke_config("llama31-8b"), dtype="float32")
+    scfg = ServerConfig(
+        policy="asymcache", num_blocks=64, block_size=16, clock="model",
+        pipeline_depth=0, host_blocks=16,
+        scheduler=SchedulerConfig(token_budget=192, max_chunk=64,
+                                  max_prefills=2, max_decodes=16,
+                                  decode_threshold=4))
+    ecfg = EngineConfig(num_pages=64, page_size=16, max_prefills=2,
+                        max_chunk=64, max_decodes=16,
+                        max_blocks_per_seq=24)
+    wl = agentic_workload(AgenticConfig(
+        n_jobs=n_jobs, tool_calls_per_job=(2, 4), system_prefix_len=48,
+        task_len=(70, 200), tool_result_len=(33, 120),
+        output_len=(20, 44), tool_duration=(0.2, 0.8), qps=3.0,
+        seed=seed))
+    return predict_trace_keys(cfg, scfg, [wl], ecfg=ecfg)
+
+
 def main(smoke: bool = False, n_jobs: int = 8, seed: int = 5) -> Rows:
     if smoke:
         n_jobs = 5
+    predicted = _predict_trace_keys(n_jobs, seed)
     res = _run_child(n_jobs, seed)
     L = res["n_layers"]
     base = res["base"]
@@ -149,8 +180,17 @@ def main(smoke: bool = False, n_jobs: int = 8, seed: int = 5) -> Rows:
         "n_layers": L,
         "base": base,
         "shardings": res["shardings"],
+        "jit_traces_predicted": len(predicted),
         "smoke": smoke,
     })
+
+    # compile-once-per-bucket, cross-checked against the static auditor:
+    # the single-device reference must compile exactly the predicted
+    # trace-key set (the per-arm gates below then carry it to every
+    # sharding via bucket_counts equality)
+    assert base["jit_traces"] == len(predicted), (
+        f"base jit_traces {base['jit_traces']} != "
+        f"predicted {len(predicted)} ({predicted})")
 
     rows = Rows()
     rows.add("sharded_serving/single/steps", base["steps"],
@@ -168,6 +208,7 @@ def main(smoke: bool = False, n_jobs: int = 8, seed: int = 5) -> Rows:
             assert d["max_first_logit_diff"] < 1e-4, (n, depth, d)
             assert d["bucket_counts"] == base["bucket_counts"], (n, depth)
             assert d["jit_traces"] == d["buckets_used"], (n, depth, d)
+            assert d["jit_traces"] == len(predicted), (n, depth, d)
             used = d["per_shard_used"]
             assert len(used) == n
             assert all(0 <= u <= d["shard_size"] for u in used), used

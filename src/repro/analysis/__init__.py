@@ -1,0 +1,62 @@
+"""Static invariant verification for the serving stack.
+
+Three lint passes plus a compile-free lattice auditor, runnable as
+``python -m repro.analysis`` (CI runs ``--strict``):
+
+* ``jit_hazards`` — host side effects, traced-value branching, host
+  syncs and nondeterminism in functions reachable from the jitted step;
+  unhashable ``static_argnums`` sources at jit call sites.
+* ``leases`` — every block-reference/pin/queued-op acquire in the block
+  manager, scheduler and server is released (or escapes into owned
+  state) on every exit path, fault paths included.
+* ``registry`` — counter names, fault sites and ``BENCH_*.json``
+  schemas agree across emitters, frozen test schemas and the docs.
+* ``lattice`` — enumerates the occupancy bucket lattice, sizes each
+  bucket abstractly with ``jax.eval_shape`` against a device budget,
+  and predicts the exact trace-key set of the gate workloads by
+  replaying the control plane in simulation (the runtime benchmarks
+  assert measured ``jit_traces`` equals this prediction).
+
+Suppression grammar (reason mandatory, counted in the report)::
+
+    # repro: allow(<pass>) — <reason>
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.common import Finding, SourceFile, iter_py_files
+
+__all__ = ["Finding", "run_all", "collect_malformed_allows"]
+
+
+def collect_malformed_allows(root: Path) -> List[Finding]:
+    """Bare ``# repro: allow(...)`` comments without a reason — they do
+    not suppress anything, so surface them as findings of their own."""
+    out: List[Finding] = []
+    for sub in ("src", "benchmarks", "tests"):
+        for p in iter_py_files(root, sub):
+            sf = SourceFile.load(p, root)
+            for line in sf.malformed:
+                out.append(Finding(
+                    "allow", sf.rel, line, "malformed-allow",
+                    "allow comment has no reason — write "
+                    "'# repro: allow(<pass>) — <why>'"))
+    return out
+
+
+def run_all(root: Path, device_budget_bytes: Optional[int] = None,
+            predict: bool = True
+            ) -> Tuple[Dict[str, object], List[Finding]]:
+    """All passes + the lattice audit.  Returns (report, findings)."""
+    from repro.analysis import jit_hazards, lattice, leases, registry
+    findings: List[Finding] = []
+    findings += jit_hazards.run(root)
+    findings += leases.run(root)
+    findings += registry.run(root)
+    findings += collect_malformed_allows(root)
+    report, lattice_findings = lattice.audit(
+        root, device_budget_bytes=device_budget_bytes, predict=predict)
+    findings += lattice_findings
+    return report, findings

@@ -1,0 +1,95 @@
+"""CLI: ``python -m repro.analysis [--strict] [--report PATH]``.
+
+Prints every finding as ``file:line: pass/code: message``, writes the
+JSON report, and (``--strict``) exits nonzero when any unsuppressed
+finding remains.  Suppressed findings are listed and counted but never
+affect the exit code — the suppression comment itself carries the
+reviewable reason.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _find_root(start: Path) -> Path:
+    p = start.resolve()
+    for cand in (p, *p.parents):
+        if (cand / "src" / "repro").is_dir():
+            return cand
+    # installed-package fallback: .../src/repro/analysis/__main__.py
+    return Path(__file__).resolve().parents[3]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-analyze",
+        description="static invariant verification for the serving stack")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: auto-detect from cwd)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any unsuppressed finding")
+    ap.add_argument("--report", type=Path,
+                    default=Path("analysis_report.json"),
+                    help="where to write the JSON report")
+    ap.add_argument("--device-budget-bytes", type=int, default=None,
+                    help="abstract per-bucket footprint budget "
+                         "(default: 2 GiB)")
+    ap.add_argument("--no-predict", action="store_true",
+                    help="skip the control-plane replay (lattice "
+                         "enumeration and footprints only)")
+    ap.add_argument("--collectives", action="store_true",
+                    help="ALSO compile one step per bucket and count "
+                         "collectives (slow; needs a jax backend)")
+    args = ap.parse_args(argv)
+
+    root = args.root or _find_root(Path.cwd())
+    from repro.analysis import run_all
+    report, findings = run_all(root,
+                               device_budget_bytes=args.device_budget_bytes,
+                               predict=not args.no_predict)
+
+    if args.collectives:
+        from repro.analysis.lattice import (_gate_setup, collective_probe)
+        import jax
+        from repro.models import init_params
+        cfg, scfg, ecfg = _gate_setup()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        report["collectives"] = collective_probe(cfg, params, scfg,
+                                                 ecfg=ecfg)
+
+    unsuppressed = [f for f in findings if not f.suppressed]
+    suppressed = [f for f in findings if f.suppressed]
+    for f in findings:
+        print(f.render())
+    print(f"{len(unsuppressed)} finding(s), "
+          f"{len(suppressed)} suppressed")
+
+    report["findings"] = [f.to_json() for f in findings]
+    report["summary"] = {
+        "unsuppressed": len(unsuppressed),
+        "suppressed": len(suppressed),
+        "by_pass": _by_pass(findings),
+    }
+    args.report.write_text(json.dumps(report, indent=2, sort_keys=True)
+                           + "\n")
+    print(f"report written to {args.report}")
+
+    if args.strict and unsuppressed:
+        return 1
+    return 0
+
+
+def _by_pass(findings):
+    out = {}
+    for f in findings:
+        d = out.setdefault(f.pass_name, {"unsuppressed": 0,
+                                         "suppressed": 0})
+        d["suppressed" if f.suppressed else "unsuppressed"] += 1
+    return out
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,407 @@
+"""jit-hazard pass: invariants of code traced into the jitted step.
+
+Everything reachable from ``Engine._step_impl`` (serving/engine.py and
+the kernels/models/distributed helpers it calls) runs at TRACE time —
+once per occupancy bucket — and the traced graph replays without the
+host.  Four hazard families break that contract:
+
+* **host side effects** — ``self.x = ...`` mutations, ``print`` —
+  execute once per trace instead of once per step (the one intentional
+  case, the ``jit_traces`` compile counter, carries an allow comment);
+* **Python branching on traced values** — ``if``/``while``/``for``/
+  ``assert`` on a tracer raises ``TracerBoolConversionError`` at best
+  and silently bakes one branch into every execution at worst;
+* **host syncs on traced values** — ``int()``/``float()``/``bool()``,
+  ``.item()``/``.tolist()``, ``np.asarray`` force a device round-trip
+  mid-trace;
+* **nondeterminism** — ``time.*``, ``datetime.*``, ``random.*``,
+  ``np.random.*`` make retraces diverge, so a bucket's variant depends
+  on *when* it compiled.
+
+Plus a **static_argnums stability** check over every ``jax.jit`` site
+in the tree: a static argument position fed an unhashable literal
+(dict/list/set) at any call site fails at runtime — or worse, a
+mutable-but-hashable source retraces per call.
+
+Tainting is intraprocedural and name-based: parameters are traced
+unless named in ``STATIC_PARAM_NAMES`` (the bucket dims and config
+handles threaded through the step) or defaulted to a literal; ``self``
+and shape/dtype attribute reads are host values.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.callgraph import CallGraph, FuncInfo
+from repro.analysis.common import (Finding, SourceFile, apply_suppressions,
+                                   iter_py_files, load_sources)
+
+PASS = "jit-hazard"
+
+# the jitted step: the only trace root in the serving stack
+ENTRY_POINTS: List[Tuple[str, str]] = [
+    ("src/repro/serving/engine.py", "Engine._step_impl"),
+]
+
+# parameter names that carry host-static values (bucket dims, configs,
+# tiling knobs) through functions reachable from the step — the
+# declarative side of the taint seeding
+STATIC_PARAM_NAMES = frozenset({
+    "self", "cfg", "ecfg", "e", "t_bucket", "np_bucket", "w_bucket",
+    "n_iter", "n_it", "page", "page_size", "q_tile", "n_tiles",
+    "window", "windows", "softcap", "impl", "eps", "axis", "axis_name",
+    "mesh", "n_shards", "n_seqs", "n_heads", "n_kv_heads", "head_dim",
+    "block_size", "causal", "dtype", "out_dtype", "fmt", "snap",
+    "snap_scale", "sentinel_seq", "layer", "scale", "theta", "split",
+    "top_k", "expert_split", "capacity_factor", "dropless",
+})
+
+# attribute reads that return host metadata even on a tracer
+_META_ATTRS = frozenset({"shape", "dtype", "ndim", "aval", "weak_type"})
+
+# dotted-name prefixes whose call results are tracers inside a trace
+_TRACER_BASES = ("jnp.", "jax.", "lax.")
+
+# dotted-name prefixes that are nondeterministic on the host
+_NONDET_PREFIXES = ("time.", "datetime.", "random.", "np.random.",
+                    "numpy.random.", "uuid.", "secrets.")
+_NONDET_BARE = frozenset({"perf_counter", "monotonic", "urandom"})
+
+
+def _dotted(node: ast.expr) -> str:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+class _FnChecker(ast.NodeVisitor):
+    """Intraprocedural taint walk of one reachable function."""
+
+    def __init__(self, fi: FuncInfo, rel: str):
+        self.fi = fi
+        self.rel = rel
+        self.findings: List[Finding] = []
+        self.tainted: Set[str] = set()
+        args = fi.node.args
+        all_args = list(args.posonlyargs) + list(args.args) \
+            + list(args.kwonlyargs)
+        defaults = [None] * (len(args.posonlyargs) + len(args.args)
+                             - len(args.defaults)) + list(args.defaults)
+        kw_defaults = list(args.kw_defaults)
+        literal_default: Set[str] = set()
+        for a, d in zip(list(args.posonlyargs) + list(args.args), defaults):
+            if isinstance(d, ast.Constant):
+                literal_default.add(a.arg)
+        for a, d in zip(args.kwonlyargs, kw_defaults):
+            if isinstance(d, ast.Constant):
+                literal_default.add(a.arg)
+        for a in all_args:
+            if a.arg not in STATIC_PARAM_NAMES \
+                    and a.arg not in literal_default:
+                self.tainted.add(a.arg)
+
+    # -- findings ------------------------------------------------------
+    def _flag(self, node: ast.AST, code: str, msg: str) -> None:
+        self.findings.append(Finding(
+            PASS, self.rel, getattr(node, "lineno", 1), code,
+            f"{self.fi.qualname}: {msg}"))
+
+    # -- taint of an expression ---------------------------------------
+    def _t(self, node: Optional[ast.expr]) -> bool:
+        if node is None or isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _META_ATTRS:
+                return False
+            return self._t(node.value)
+        if isinstance(node, ast.Subscript):
+            return self._t(node.value) or self._t(node.slice)
+        if isinstance(node, ast.Call):
+            name = _dotted(node.func)
+            if name.startswith(_TRACER_BASES):
+                return True
+            if name == "range" or name == "len":
+                return any(self._t(a) for a in node.args)
+            return any(self._t(a) for a in node.args) \
+                or any(self._t(k.value) for k in node.keywords) \
+                or self._t(node.func)
+        if isinstance(node, (ast.BinOp,)):
+            return self._t(node.left) or self._t(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self._t(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self._t(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.In, ast.NotIn)) for op in node.ops):
+                # `"key" in inp` probes container STRUCTURE (static under
+                # trace) — only the probed key itself can carry taint
+                return self._t(node.left)
+            return self._t(node.left) \
+                or any(self._t(c) for c in node.comparators)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self._t(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return self._t(node.body) or self._t(node.orelse) \
+                or self._t(node.test)
+        if isinstance(node, ast.Starred):
+            return self._t(node.value)
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            return self._t(node.elt) or any(
+                self._t(g.iter) for g in node.generators)
+        if isinstance(node, ast.DictComp):
+            return self._t(node.key) or self._t(node.value) or any(
+                self._t(g.iter) for g in node.generators)
+        if isinstance(node, ast.Slice):
+            return any(self._t(p) for p in
+                       (node.lower, node.upper, node.step))
+        if isinstance(node, ast.Dict):
+            return any(self._t(v) for v in node.values)
+        return False
+
+    def _mark(self, target: ast.expr, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            (self.tainted.add if tainted
+             else self.tainted.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._mark(e, tainted)
+
+    # -- statement visitors -------------------------------------------
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.generic_visit(node)
+        tainted = self._t(node.value)
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Attribute) \
+                    and isinstance(tgt.value, ast.Name) \
+                    and tgt.value.id == "self":
+                self._flag(node, "host-side-effect",
+                           f"assignment to self.{tgt.attr} inside the "
+                           "traced step runs once per trace, not per step")
+            self._mark(tgt, tainted)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.generic_visit(node)
+        tgt = node.target
+        if isinstance(tgt, ast.Attribute) \
+                and isinstance(tgt.value, ast.Name) and tgt.value.id == "self":
+            self._flag(node, "host-side-effect",
+                       f"in-place update of self.{tgt.attr} inside the "
+                       "traced step runs once per trace, not per step")
+        if isinstance(tgt, ast.Name) and self._t(node.value):
+            self.tainted.add(tgt.id)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        self.generic_visit(node)
+        if node.value is not None:
+            self._mark(node.target, self._t(node.value))
+
+    def visit_If(self, node: ast.If) -> None:
+        if self._t(node.test):
+            self._flag(node, "traced-branch",
+                       "Python `if` on a traced value — use jnp.where/"
+                       "lax.cond, or hoist the decision to a static arg")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        if self._t(node.test):
+            self._flag(node, "traced-branch",
+                       "Python `while` on a traced value")
+        self.generic_visit(node)
+
+    def visit_Assert(self, node: ast.Assert) -> None:
+        if self._t(node.test):
+            self._flag(node, "traced-branch",
+                       "assert on a traced value forces a host sync")
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For) -> None:
+        if self._t(node.iter):
+            self._flag(node, "traced-branch",
+                       "Python iteration over a traced value unrolls "
+                       "data-dependently")
+        else:
+            self._mark(node.target, False)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _dotted(node.func)
+        if name == "print":
+            self._flag(node, "host-side-effect",
+                       "print inside the traced step fires at trace "
+                       "time only")
+        if name.startswith(_NONDET_PREFIXES) \
+                or name.split(".")[-1] in _NONDET_BARE:
+            self._flag(node, "nondeterminism",
+                       f"{name}() inside the traced step bakes a "
+                       "trace-time value into the compiled variant")
+        if name in ("int", "float", "bool") \
+                and any(self._t(a) for a in node.args):
+            self._flag(node, "host-sync",
+                       f"{name}() on a traced value forces a device "
+                       "round-trip mid-trace")
+        if name in ("np.asarray", "np.array", "numpy.asarray",
+                    "numpy.array") and any(self._t(a) for a in node.args):
+            self._flag(node, "host-sync",
+                       f"{name}() on a traced value materializes it on "
+                       "the host mid-trace")
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("item", "tolist") \
+                and self._t(node.func.value):
+            self._flag(node, "host-sync",
+                       f".{node.func.attr}() on a traced value forces a "
+                       "device round-trip mid-trace")
+        self.generic_visit(node)
+
+
+# ----------------------------------------------------------------------
+# static_argnums stability
+# ----------------------------------------------------------------------
+
+_UNHASHABLE = (ast.Dict, ast.List, ast.Set, ast.DictComp, ast.ListComp,
+               ast.SetComp)
+
+
+def _static_positions(call: ast.Call) -> Optional[List[int]]:
+    for kw in call.keywords:
+        if kw.arg in ("static_argnums", "static_argnames"):
+            if kw.arg == "static_argnames":
+                return None            # name-keyed: positions unknown
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return [v.value]
+            if isinstance(v, (ast.Tuple, ast.List)):
+                out = []
+                for e in v.elts:
+                    if isinstance(e, ast.Constant) \
+                            and isinstance(e.value, int):
+                        out.append(e.value)
+                return out
+    return None
+
+
+def _is_jit(call: ast.Call) -> bool:
+    return _dotted(call.func) in ("jax.jit", "jit")
+
+
+def check_static_argnums(sf: SourceFile) -> List[Finding]:
+    """Flag unhashable literals fed to static positions of jitted
+    callables, at the ``jax.jit`` site's local call sites.
+
+    A bound method loses ``self`` before jit sees it, so
+    ``static_argnums`` over ``self.f`` indexes the remaining
+    parameters — call sites of the stored name use the same indexing."""
+    findings: List[Finding] = []
+    jitted: Dict[str, List[int]] = {}   # stored name/attr -> positions
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call)\
+                and _is_jit(node.value):
+            pos = _static_positions(node.value)
+            if pos is None:
+                continue
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    jitted[tgt.id] = pos
+                elif isinstance(tgt, ast.Attribute):
+                    jitted[tgt.attr] = pos
+        # immediate call: jax.jit(f, static_argnums=...)(args...)
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Call) \
+                and _is_jit(node.func):
+            pos = _static_positions(node.func)
+            if pos:
+                findings += _check_call_args(sf, node, pos)
+    if jitted:
+        # local name -> most recent unhashable-literal assignment line
+        unhashable_names: Dict[str, int] = {}
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, _UNHASHABLE):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        unhashable_names[tgt.id] = node.lineno
+            if isinstance(node, ast.Call):
+                f = node.func
+                name = f.id if isinstance(f, ast.Name) else (
+                    f.attr if isinstance(f, ast.Attribute) else None)
+                if name in jitted:
+                    findings += _check_call_args(
+                        sf, node, jitted[name], unhashable_names)
+    return findings
+
+
+def _check_call_args(sf: SourceFile, call: ast.Call, positions: List[int],
+                     unhashable_names: Optional[Dict[str, int]] = None
+                     ) -> List[Finding]:
+    out: List[Finding] = []
+    for p in positions:
+        if p >= len(call.args):
+            continue
+        arg = call.args[p]
+        bad = isinstance(arg, _UNHASHABLE)
+        via = ""
+        if not bad and unhashable_names and isinstance(arg, ast.Name) \
+                and arg.id in unhashable_names:
+            bad = True
+            via = f" (assigned a literal at line " \
+                  f"{unhashable_names[arg.id]})"
+        if bad:
+            out.append(Finding(
+                PASS, sf.rel, call.lineno, "unhashable-static-arg",
+                f"static_argnums position {p} receives an unhashable "
+                f"dict/list/set{via} — jit static args must be hashable "
+                "and stable"))
+    return out
+
+
+# ----------------------------------------------------------------------
+# pass driver
+# ----------------------------------------------------------------------
+
+def run(root: Path) -> List[Finding]:
+    rels = [p.relative_to(root).as_posix()
+            for p in iter_py_files(root, "src/repro")]
+    sources = load_sources(root, rels)
+    graph = CallGraph(root, sources)
+    findings: List[Finding] = []
+    for fi in graph.reachable(ENTRY_POINTS):
+        checker = _FnChecker(fi, fi.rel)
+        for stmt in fi.node.body:
+            checker.visit(stmt)
+        findings += checker.findings
+    for sf in sources.values():
+        findings += check_static_argnums(sf)
+    return apply_suppressions(findings, sources)
+
+
+def scan_source(text: str, rel: str = "fixture.py") -> List[Finding]:
+    """Fixture entry point: every top-level function in ``text`` is
+    treated as trace-reachable, and the static_argnums check runs over
+    the whole snippet."""
+    root = Path("/")
+    sf = SourceFile(path=root / rel, rel=rel, text=text,
+                    tree=ast.parse(text))
+    for i, line in enumerate(text.splitlines(), start=1):
+        from repro.analysis.common import _ALLOW_RE
+        m = _ALLOW_RE.search(line)
+        if m:
+            sf.allows[i] = (m.group(1), m.group(2).strip())
+    findings: List[Finding] = []
+    sources = {rel: sf}
+    graph = CallGraph(root, sources)
+    mi = graph.by_rel[rel]
+    entries = [(rel, q) for q in mi.funcs]
+    for fi in graph.reachable(entries):
+        checker = _FnChecker(fi, rel)
+        for stmt in fi.node.body:
+            checker.visit(stmt)
+        findings += checker.findings
+    findings += check_static_argnums(sf)
+    return apply_suppressions(findings, sources)

@@ -102,6 +102,89 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+def derive_bucket_lattice(ecfg: "EngineConfig"
+                          ) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """``(token_buckets, np_buckets)`` implied by an :class:`EngineConfig`.
+
+    The single source of the occupancy lattice: ``Engine.__init__``
+    compiles from it and the static auditor
+    (``repro.analysis.lattice``) enumerates it without instantiating
+    pools — the two must never disagree, or the auditor's predicted
+    trace-key set stops matching ``jit_traces``.
+
+    Fused mode: a decode-full bucket (decode-only steps are the
+    continuous-batching common case — at full decode occupancy that
+    bucket carries no padding at all) plus power-of-two fractions of
+    Tmax down to Tmax/16; split mode compiles exactly once at
+    ``(t_max, NP)``."""
+    R, QP, B, NP = (ecfg.max_prefills, ecfg.max_chunk,
+                    ecfg.max_decodes, ecfg.max_blocks_per_seq)
+    t_max = R * QP + B
+    if ecfg.attn_mode != "fused":
+        return (t_max,), (NP,)
+    tb = ecfg.token_buckets or (
+        max(8, _round_up(B, 8)),
+        max(8, _round_up(t_max // 16, 8)),
+        max(8, _round_up(t_max // 8, 8)),
+        max(8, _round_up(t_max // 4, 8)),
+        max(8, _round_up(t_max // 2, 8)),
+    )
+    nb = ecfg.np_buckets or (max(1, NP // 4),)
+    token_buckets = tuple(sorted(
+        {min(t_max, max(1, int(t))) for t in tb} | {t_max}))
+    np_buckets = tuple(sorted(
+        {min(NP, max(1, int(n))) for n in nb} | {NP}))
+    return token_buckets, np_buckets
+
+
+def pack_layout_for(ecfg: "EngineConfig", n_shards: int, t_bucket: int,
+                    np_bucket: int, w_bucket: int, n_iter: int = 1
+                    ) -> Tuple[List[Tuple[str, int, int]], int]:
+    """(name, offset, size) triples of the flat int32 pack buffer for
+    one occupancy bucket, plus its total length.
+
+    Pure function of the config so the static auditor can size every
+    bucket's host->device transfer without an :class:`Engine`;
+    ``Engine.pack_layout`` delegates here (with a per-engine cache).
+
+    Multi-token decode plans (``n_iter > 1``, fused layout only) carry
+    PER-ITERATION copies of the fields that change between the fused
+    decode iterations (tokens/positions/valid/write coords/ctx/qlen and
+    the Pallas work-list); the sequence-row structure
+    (seq_ids/sel/qstart/bt) and the page-op queues are shared.  The
+    ``n_iter == 1`` layout is byte-identical to the single-step one."""
+    e = ecfg
+    R, B = e.max_prefills, e.max_decodes
+    # per-shard in-step op queues: shard i's copies/swaps live in row i
+    # (shard-LOCAL page indices); single-device keeps the flat layout
+    C = n_shards * e.max_instep_copies
+    S = n_shards * e.max_instep_swaps
+    if e.attn_mode == "fused":
+        t, n, k = t_bucket, R + B, n_iter
+        fields = [("tokens", k * t), ("positions", k * t),
+                  ("valid", k * t), ("write_slot", k * t),
+                  ("write_off", k * t), ("seq_ids", t),
+                  ("sel", R + B), ("qstart", n), ("qlen", k * n),
+                  ("ctx", k * n), ("bt", n * np_bucket)]
+        fields += [(f, k * w_bucket) for f in WL_FIELDS]
+        fields += [("copy_src", C), ("copy_dst", C),
+                   ("swap_k_dst", S), ("swap_v_dst", S)]
+    else:
+        t, NP = R * e.max_chunk + B, e.max_blocks_per_seq
+        fields = [("tokens", t), ("positions", t), ("valid", t),
+                  ("write_slot", t), ("write_off", t), ("sel", R + B),
+                  ("qlens", R), ("ctx_pre", R), ("ctx_dec", B),
+                  ("bt_pre", R * NP), ("bt_dec", B * NP),
+                  ("copy_src", C), ("copy_dst", C),
+                  ("swap_k_dst", S), ("swap_v_dst", S)]
+    layout: List[Tuple[str, int, int]] = []
+    off = 0
+    for name, size in fields:
+        layout.append((name, off, size))
+        off += size
+    return layout, off
+
+
 @dataclass(frozen=True)
 class EngineConfig:
     num_pages: int                 # KV pool pages (= block manager blocks)
@@ -317,27 +400,9 @@ class Engine:
                         ecfg.max_decodes, ecfg.max_blocks_per_seq)
         self.n_seqs = R + B
         self.t_max = R * QP + B
-        if ecfg.attn_mode == "fused":
-            # default lattice: a decode-full bucket (decode-only steps
-            # are the continuous-batching common case — at full decode
-            # occupancy that bucket carries no padding at all) plus
-            # power-of-two fractions of Tmax down to Tmax/16
-            tb = ecfg.token_buckets or (
-                max(8, _round_up(B, 8)),
-                max(8, _round_up(self.t_max // 16, 8)),
-                max(8, _round_up(self.t_max // 8, 8)),
-                max(8, _round_up(self.t_max // 4, 8)),
-                max(8, _round_up(self.t_max // 2, 8)),
-            )
-            nb = ecfg.np_buckets or (max(1, NP // 4),)
-            self.token_buckets = tuple(sorted(
-                {min(self.t_max, max(1, int(t))) for t in tb}
-                | {self.t_max}))
-            self.np_buckets = tuple(sorted(
-                {min(NP, max(1, int(n))) for n in nb} | {NP}))
-        else:
-            self.token_buckets = (self.t_max,)
-            self.np_buckets = (NP,)
+        # one derivation shared with the static lattice auditor
+        # (repro.analysis.lattice enumerates the same function)
+        self.token_buckets, self.np_buckets = derive_bucket_lattice(ecfg)
         self._t_bucket_set = set(self.token_buckets)
         self._np_bucket_set = set(self.np_buckets)
         # deterministic accounting (benchmarks/kernel_fusion.py gates)
@@ -377,46 +442,14 @@ class Engine:
                     n_iter: int = 1):
         """(name, offset, size) triples of the flat int32 pack buffer for
         one occupancy bucket (cached; trace-time and assembly agree).
-
-        Multi-token decode plans (``n_iter > 1``, fused layout only)
-        carry PER-ITERATION copies of the fields that change between the
-        fused decode iterations (tokens/positions/valid/write coords/
-        ctx/qlen and the Pallas work-list); the sequence-row structure
-        (seq_ids/sel/qstart/bt) and the page-op queues are shared.  The
-        ``n_iter == 1`` layout is byte-identical to the single-step one."""
+        Delegates to :func:`pack_layout_for` — the pure form the static
+        auditor sizes buckets with."""
         key = (t_bucket, np_bucket, w_bucket, n_iter)
         cached = self._layouts.get(key)
         if cached is not None:
             return cached
-        e = self.ecfg
-        R, B = e.max_prefills, e.max_decodes
-        # per-shard in-step op queues: shard i's copies/swaps live in row i
-        # (shard-LOCAL page indices); single-device keeps the flat layout
-        C = self.n_shards * e.max_instep_copies
-        S = self.n_shards * e.max_instep_swaps
-        if e.attn_mode == "fused":
-            t, n, k = t_bucket, self.n_seqs, n_iter
-            fields = [("tokens", k * t), ("positions", k * t),
-                      ("valid", k * t), ("write_slot", k * t),
-                      ("write_off", k * t), ("seq_ids", t),
-                      ("sel", R + B), ("qstart", n), ("qlen", k * n),
-                      ("ctx", k * n), ("bt", n * np_bucket)]
-            fields += [(f, k * w_bucket) for f in WL_FIELDS]
-            fields += [("copy_src", C), ("copy_dst", C),
-                       ("swap_k_dst", S), ("swap_v_dst", S)]
-        else:
-            t, NP = self.t_max, e.max_blocks_per_seq
-            fields = [("tokens", t), ("positions", t), ("valid", t),
-                      ("write_slot", t), ("write_off", t), ("sel", R + B),
-                      ("qlens", R), ("ctx_pre", R), ("ctx_dec", B),
-                      ("bt_pre", R * NP), ("bt_dec", B * NP),
-                      ("copy_src", C), ("copy_dst", C),
-                      ("swap_k_dst", S), ("swap_v_dst", S)]
-        layout: List[Tuple[str, int, int]] = []
-        off = 0
-        for name, size in fields:
-            layout.append((name, off, size))
-            off += size
+        layout, off = pack_layout_for(self.ecfg, self.n_shards, t_bucket,
+                                      np_bucket, w_bucket, n_iter)
         self._layouts[key] = (layout, off)
         return layout, off
 
@@ -457,7 +490,10 @@ class Engine:
     def _step_impl(self, params, k_pools, v_pools, inp,
                    t_bucket: int, np_bucket: int, w_bucket: int,
                    n_iter: int = 1):
-        self.jit_traces += 1           # side effect at trace time only
+        # repro: allow(jit-hazard) — intentional trace-time-only side
+        # effect: counts compiled step variants for the
+        # compile-once-per-bucket gate; never traced into the graph
+        self.jit_traces += 1
         cfg, e = self.cfg, self.ecfg
         if e.assembly != "legacy":
             # trace-time slicing of the pack into named views

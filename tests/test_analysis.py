@@ -1,0 +1,248 @@
+"""Tests for the static-analysis suite (repro.analysis).
+
+Seeded true-positive fixtures (a leaked pin on an early return, a dict
+passed as a static jit argument, a counter renamed on one side only)
+must be flagged at the exact file:line; the real tree must come back
+clean; and the CLI must exit 0 on this repo in --strict mode.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import collect_malformed_allows, jit_hazards, leases
+from repro.analysis import registry
+from repro.analysis.common import SourceFile
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _codes(findings):
+    return sorted((f.path, f.line, f.code) for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# jit-hazard pass
+
+def test_jit_hazard_flags_dict_static_arg():
+    src = textwrap.dedent("""\
+        import jax
+
+        def g(x, cfg):
+            return x
+
+        f = jax.jit(g, static_argnums=(1,))
+
+        def call(x):
+            return f(x, {"n": 3})
+    """)
+    fs = jit_hazards.scan_source(src)
+    hits = [f for f in fs if f.code == "unhashable-static-arg"]
+    assert len(hits) == 1
+    assert hits[0].line == 9                     # the call site line
+    assert hits[0].path == "fixture.py"
+
+
+def test_jit_hazard_flags_host_side_effect_and_traced_branch():
+    src = textwrap.dedent("""\
+        import jax.numpy as jnp
+
+        class E:
+            def step(self, x):
+                self.count += 1
+                y = jnp.sum(x)
+                if y > 0:
+                    return y
+                return -y
+    """)
+    fs = jit_hazards.scan_source(src)
+    codes = {(f.code, f.line) for f in fs}
+    assert ("host-side-effect", 5) in codes
+    assert ("traced-branch", 7) in codes
+
+
+def test_jit_hazard_clean_function_passes():
+    src = textwrap.dedent("""\
+        import jax.numpy as jnp
+
+        def step(x, n_heads):
+            # n_heads is a declared-static name; reshaping on it is fine
+            y = x.reshape(n_heads, -1)
+            if n_heads > 1:
+                y = y * 2
+            return jnp.sum(y)
+    """)
+    assert jit_hazards.scan_source(src) == []
+
+
+def test_jit_hazard_repo_tree_has_only_the_one_suppression():
+    fs = jit_hazards.run(REPO)
+    unsuppressed = [f for f in fs if not f.suppressed]
+    assert unsuppressed == [], [f.render() for f in unsuppressed]
+    suppressed = [f for f in fs if f.suppressed]
+    assert [(f.path, f.code) for f in suppressed] == \
+        [("src/repro/serving/engine.py", "host-side-effect")]
+
+
+# ---------------------------------------------------------------------------
+# lease pass
+
+def test_lease_flags_unreleased_pin_on_early_return():
+    src = textwrap.dedent("""\
+        def admit(bm, req, now, fast):
+            slot = bm.allocate(1, now)
+            if slot is None:
+                return False
+            bm.pin([slot], now + 5.0)
+            if fast:
+                return True
+            req.block_slots = [slot]
+            return True
+    """)
+    fs = leases.scan_source(src)
+    assert fs, "expected leaked-lease findings"
+    assert all(f.code == "leaked-lease" for f in fs)
+    # the allocate token leaks at the early return (the pin is
+    # time-bounded — it discharges by expiry, so it is not a leak)
+    assert [(f.line, f.path) for f in fs] == [(7, "fixture.py")]
+    assert "allocate" in fs[0].message and "line 2" in fs[0].message
+
+
+def test_lease_balanced_paths_pass():
+    src = textwrap.dedent("""\
+        def admit(bm, req, now, fast):
+            slot = bm.allocate(1, now)
+            if slot is None:
+                return False
+            if fast:
+                bm.release([slot], now)
+                return True
+            req.block_slots = [slot]
+            return True
+    """)
+    assert leases.scan_source(src) == []
+
+
+def test_lease_repo_tree_clean():
+    fs = leases.run(REPO)
+    assert [f for f in fs if not f.suppressed] == [], \
+        [f.render() for f in fs]
+
+
+# ---------------------------------------------------------------------------
+# registry pass
+
+SIM_SERVER = textwrap.dedent("""\
+    class _SimEngine:
+        def perf_counters(self):
+            return {
+                "engine_dispatches": self.steps,
+                "decode_tokens_RENAMED": self.toks,
+            }
+""")
+
+SIM_TEST = textwrap.dedent("""\
+    SIM_ENGINE_KEYS = frozenset({
+        "engine_dispatches",
+        "decode_tokens_emitted",
+    })
+""")
+
+
+def test_registry_flags_counter_renamed_on_one_side(tmp_path):
+    (tmp_path / "src" / "repro" / "serving").mkdir(parents=True)
+    (tmp_path / "tests").mkdir()
+    (tmp_path / "src" / "repro" / "serving" / "server.py").write_text(
+        SIM_SERVER)
+    (tmp_path / "tests" / "test_perf_counters.py").write_text(SIM_TEST)
+    fs = registry.run(tmp_path)
+    by_code = {f.code: f for f in fs}
+    # the renamed emitter key, at its dict-literal line in server.py
+    assert "unregistered-counter" in by_code, [f.render() for f in fs]
+    f = by_code["unregistered-counter"]
+    assert f.path == "src/repro/serving/server.py" and f.line == 5
+    assert "decode_tokens_RENAMED" in f.message
+    # the now-dead frozen key, anchored at its line in the test file
+    f = by_code["dead-schema-key"]
+    assert f.path == "tests/test_perf_counters.py" and f.line == 3
+    assert "decode_tokens_emitted" in f.message
+
+
+def test_registry_repo_tree_clean():
+    fs = registry.run(REPO)
+    assert [f for f in fs if not f.suppressed] == [], \
+        [f.render() for f in fs]
+
+
+def test_no_malformed_allow_comments():
+    assert collect_malformed_allows(REPO) == []
+
+
+# ---------------------------------------------------------------------------
+# lattice auditor
+
+def test_enumerate_lattice_matches_engine_derivation():
+    from repro.analysis.lattice import enumerate_lattice
+    from repro.serving.engine import EngineConfig, derive_bucket_lattice
+    ecfg = EngineConfig(num_pages=64, page_size=16, max_prefills=2,
+                        max_chunk=64, max_decodes=16,
+                        max_blocks_per_seq=24)
+    lat = enumerate_lattice(ecfg)
+    tb, nb = derive_bucket_lattice(ecfg)
+    assert tuple(lat["token_buckets"]) == tb
+    assert tuple(lat["np_buckets"]) == nb
+    assert lat["w_buckets"] == [0] and lat["k_values"] == [1]
+    assert lat["max_trace_keys"] == len(tb) * len(nb)
+
+
+def test_bucket_footprints_budget_violation():
+    from repro.analysis.lattice import bucket_footprints
+    from repro.configs import get_smoke_config, scaled_config
+    from repro.serving.engine import EngineConfig
+    cfg = scaled_config(get_smoke_config("llama31-8b"), dtype="float32")
+    ecfg = EngineConfig(num_pages=64, page_size=16, max_prefills=2,
+                        max_chunk=64, max_decodes=16,
+                        max_blocks_per_seq=24)
+    rep, fs = bucket_footprints(cfg, ecfg, device_budget_bytes=1)
+    assert rep["worst_case_total_bytes"] > 0
+    assert fs and all(f.code == "bucket-over-budget" for f in fs)
+    rep, fs = bucket_footprints(cfg, ecfg, device_budget_bytes=None)
+    assert fs == []
+
+
+def test_predicted_keys_stay_on_lattice():
+    from repro.analysis.lattice import (_gate_setup, _gate_workloads,
+                                        enumerate_lattice,
+                                        predict_trace_keys)
+    cfg, scfg, ecfg = _gate_setup()
+    keys = predict_trace_keys(cfg, scfg, _gate_workloads(smoke=True)[:2],
+                              ecfg=ecfg)
+    lat = enumerate_lattice(ecfg)
+    assert keys and len(keys) <= lat["max_trace_keys"]
+    for t, np_, w, k in keys:
+        assert t in lat["token_buckets"] and np_ in lat["np_buckets"]
+        assert w == 0 and k in lat["k_values"]
+
+
+# ---------------------------------------------------------------------------
+# the CLI on this repo
+
+def test_cli_strict_exits_zero(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    report = tmp_path / "analysis_report.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--strict",
+         "--no-predict", "--report", str(report)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert report.is_file()
+    import json
+    rep = json.loads(report.read_text())
+    assert rep["summary"]["unsuppressed"] == 0
+    assert rep["summary"]["suppressed"] >= 1
+    assert rep["lattice"]["max_trace_keys"] >= 1
