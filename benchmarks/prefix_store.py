@@ -1,0 +1,303 @@
+"""Content-addressed global prefix store: cross-restart + multi-tenant
+A/B benchmark (survey arXiv 2412.19442 system-level prefix reuse).
+
+Three sections, all gated on DETERMINISTIC counters and byte
+comparisons — never wall clock:
+
+**A. Cross-restart round trip (real engine).** A cold server serves the
+shared-prefix workload, snapshots its store to disk, and a FRESH server
+boots from the snapshot and serves the same workload.  Gates:
+byte-identical greedy outputs (``generated`` / ``sampled_ids`` /
+``first_logits``), warm ``prefill_compute_tokens`` cut >= 2x vs cold,
+``store_restored``/``store_hits`` non-zero (vacuousness), and an
+unchanged jit lattice (``jit_traces == len(buckets_used)``) on the
+store path.
+
+**B. Tenant isolation (store-level seeded sweeps + sim serving).**
+Deterministic op-sequence sweeps against a quota'd ``PrefixStore``
+assert the isolation invariant — an entry solely owned by one tenant
+survives every other tenant's deposits/fetches (quota pressure sheds
+only the at-fault tenant's entries) — plus a two-tenant sim serve under
+a tight quota whose outputs must equal the unconstrained run exactly
+(quota pressure costs recompute, never correctness).
+
+**C. Admission pre-flight dedup (sim).** A burst of identical-prefix
+arrivals: ``analyze_batch`` must report the duplicates and hold the
+followers so the shared blocks prefill once (``store_preflight_holds``)
+with a bounded ``prefill_compute_tokens``.
+
+Metrics land in ``BENCH_prefix_store.json`` (uploaded as a CI artifact).
+
+    PYTHONPATH=src:. python -m benchmarks.run --only prefix_store
+    PYTHONPATH=src:. python benchmarks/prefix_store.py --smoke   # CI gate
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import random
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import Rows, write_bench_json
+
+
+# ---------------------------------------------------------------------------
+# section A: cross-restart round trip (real engine)
+# ---------------------------------------------------------------------------
+
+def _engine_server(cfg, params, snapshot=None):
+    from repro.core import PrefixStoreConfig
+    from repro.serving import AsymCacheServer, SchedulerConfig, ServerConfig
+    scfg = ServerConfig(
+        policy="asymcache", num_blocks=48, block_size=16, clock="model",
+        host_blocks=16,
+        prefix_store=PrefixStoreConfig(capacity_bytes=1 << 26,
+                                       snapshot_path=snapshot),
+        scheduler=SchedulerConfig(token_budget=128, max_chunk=64,
+                                  max_prefills=2, max_decodes=8))
+    return AsymCacheServer(cfg, params, scfg)
+
+
+def _shared_wl(n_jobs: int, seed: int = 0, tenants: int = 1):
+    from repro.serving.workload import (SharedPrefixConfig,
+                                        shared_prefix_workload)
+    return shared_prefix_workload(SharedPrefixConfig(
+        n_jobs=n_jobs, qps=4.0, seed=seed, tenants=tenants))
+
+
+def _restart_section(cfg, params, n_jobs: int, seed: int):
+    """Cold serve -> snapshot -> fresh warm boot -> byte-identical serve
+    with >= 2x fewer prefill-computed tokens."""
+    wl_cold = _shared_wl(n_jobs, seed)
+    cold = _engine_server(cfg, params)
+    res_cold = cold.run(wl_cold)
+    path = os.path.join(tempfile.mkdtemp(prefix="prefix_store_"),
+                        "store.pkl")
+    exported = cold.snapshot_store(path)
+    assert exported > 0, "gate vacuous: nothing exported at snapshot"
+
+    wl_warm = _shared_wl(n_jobs, seed)
+    warm = _engine_server(cfg, params, snapshot=path)
+    res_warm = warm.run(wl_warm)
+    assert res_warm["store_restored"] > 0, "gate vacuous: nothing restored"
+    assert res_warm["store_hits"] > 0 and res_warm["swap_ins"] > 0
+
+    # byte identity: the restored KV must not change ONE bit
+    for a, b in zip(wl_cold, wl_warm):
+        assert a.generated == b.generated, a.rid
+        assert a.sampled_ids == b.sampled_ids, a.rid
+        assert np.array_equal(a.first_logits, b.first_logits), a.rid
+
+    # the actual perf claim: >= 2x cross-restart prefill-token reduction
+    pc, pw = res_cold["prefill_compute_tokens"], \
+        res_warm["prefill_compute_tokens"]
+    assert pw > 0 and pw * 2 <= pc, (pc, pw)
+
+    # the store path must not widen the compile-shape lattice
+    assert warm.engine.jit_traces == len(warm.engine.buckets_used)
+    warm.bm.check_invariants()
+    return {
+        "exported": exported,
+        "restored": res_warm["store_restored"],
+        "store_hits": res_warm["store_hits"],
+        "swap_ins": res_warm["swap_ins"],
+        "prefill_tokens_cold": pc,
+        "prefill_tokens_warm": pw,
+        "prefill_reduction": pc / pw,
+        "jit_traces": warm.engine.jit_traces,
+        "byte_identical": True,
+    }
+
+
+# ---------------------------------------------------------------------------
+# section B: tenant isolation
+# ---------------------------------------------------------------------------
+
+def _isolation_sweep(n_seeds: int, ops_per_seed: int = 120):
+    """Seeded random op sweeps against a quota'd store: after EVERY op,
+    the accounting audits clean and every entry solely owned by a tenant
+    other than the actor is still resident (quota pressure never evicts
+    a neighbor)."""
+    from repro.core import PrefixStore, PrefixStoreConfig
+    from repro.core.offload import HostEntry, HostHalf
+
+    def entry():
+        return HostEntry(
+            block_pos=0,
+            k=HostHalf(data=None, scale=None, nbytes=8, fmt="fp"),
+            v=HostHalf(data=None, scale=None, nbytes=8, fmt="fp"))
+
+    checked = 0
+    for seed in range(n_seeds):
+        rng = random.Random(seed)
+        store = PrefixStore(PrefixStoreConfig(capacity_bytes=1 << 20,
+                                              tenant_quota_bytes=48),
+                            fingerprint=b"\x42" * 16)
+        keys = [bytes([i]) * 16 for i in range(10)]
+        now = 0.0
+        for _ in range(ops_per_seed):
+            now += 1.0
+            actor = rng.choice(["a", "b", "c"])
+            ck = rng.choice(keys)
+            sole_others = {
+                k for k, e in store._entries.items()
+                if e.payload is not None and len(e.owners) == 1
+                and actor not in e.owners}
+            if rng.random() < 0.5:
+                store.deposit(ck, entry(), actor, now)
+            else:
+                got = store.acquire(ck, actor, now)
+                if got is not None:
+                    store.release(ck)
+            store.check_invariants()
+            survivors = {k for k in sole_others
+                         if k in store._entries
+                         and store._entries[k].payload is not None
+                         # global capacity pressure may evict anything;
+                         # here capacity is ample, so only quota logic
+                         # could have touched it
+                         }
+            assert survivors == sole_others, \
+                f"seed {seed}: {actor} evicted a neighbor's sole entry"
+            checked += len(sole_others)
+    assert checked > 0, "gate vacuous: sweep never saw sole-owned entries"
+    return {"seeds": n_seeds, "ops_per_seed": ops_per_seed,
+            "neighbor_checks": checked}
+
+
+def _sim_server(num_blocks: int, quota: int = 0):
+    from repro.configs import get_smoke_config
+    from repro.core import PrefixStoreConfig
+    from repro.serving import AsymCacheServer, ServerConfig
+    cfg = get_smoke_config("llama31-8b")
+    return AsymCacheServer(cfg, None, ServerConfig(
+        policy="asymcache", num_blocks=num_blocks, block_size=16,
+        clock="model", execute_model=False,
+        prefix_store=PrefixStoreConfig(capacity_bytes=1 << 20,
+                                       tenant_quota_bytes=quota)))
+
+
+def _tenancy_sim_section(n_jobs: int):
+    """Two-tenant sim serve under a tight quota: outputs must equal the
+    unconstrained run exactly; quota pressure shows up ONLY in the
+    store_quota_rejects / tenant_* counters."""
+    free = _sim_server(num_blocks=24)
+    wl_free = _shared_wl(n_jobs, seed=1, tenants=2)
+    res_free = free.run(wl_free)
+    assert res_free["store_entries"] > 0, "gate vacuous: no deposits"
+    per_entry = res_free["store_bytes"] // res_free["store_entries"]
+
+    tight = _sim_server(num_blocks=24, quota=2 * per_entry)
+    wl_tight = _shared_wl(n_jobs, seed=1, tenants=2)
+    res_tight = tight.run(wl_tight)
+    pressure = (res_tight["store_quota_rejects"]
+                + res_tight["tenant_quota_evictions"]
+                + res_tight["tenant_shed_ownerships"])
+    assert pressure > 0, "gate vacuous: quota never binding"
+    for a, b in zip(wl_free, wl_tight):
+        assert a.generated == b.generated, a.rid
+    tight.bm.check_invariants()
+    assert res_tight["tenant_count"] >= 1
+    return {
+        "quota_bytes": 2 * per_entry,
+        "quota_rejects": res_tight["store_quota_rejects"],
+        "tenant_evictions": res_tight["tenant_quota_evictions"],
+        "shed_ownerships": res_tight["tenant_shed_ownerships"],
+        "tenants": res_tight["tenant_count"],
+        "outputs_identical": True,
+    }
+
+
+# ---------------------------------------------------------------------------
+# section C: admission pre-flight dedup
+# ---------------------------------------------------------------------------
+
+def _preflight_section(n_dup: int):
+    """A same-instant burst of identical-prefix requests: the pre-flight
+    report holds every follower, so the shared blocks prefill once."""
+    from repro.serving.request import Request
+    srv = _sim_server(num_blocks=96)
+    shared = list(range(64))
+    reqs = [Request(rid=i, session_id=i,
+                    prompt_tokens=shared + [500 + i] * 8,
+                    output_script=[1, 2, 3], arrival=0.0)
+            for i in range(n_dup)]
+    res = srv.run(reqs)
+    assert res["store_preflight_reports"] >= 1
+    assert res["store_preflight_holds"] == n_dup - 1, res
+    # the leader prefills the 4 shared blocks; every follower computes
+    # only its unique tail + the forced sampling position
+    bound = len(shared) + n_dup * (8 + 1) + 16
+    assert res["prefill_compute_tokens"] <= bound, \
+        (res["prefill_compute_tokens"], bound)
+    return {
+        "requests": n_dup,
+        "preflight_holds": res["store_preflight_holds"],
+        "preflight_dup_blocks": res["store_preflight_dup_blocks"],
+        "prefill_tokens": res["prefill_compute_tokens"],
+        "prefill_bound": bound,
+    }
+
+
+# ---------------------------------------------------------------------------
+
+def main(smoke: bool = False, seed: int = 0) -> Rows:
+    import jax
+    from repro.configs import get_smoke_config, scaled_config
+    from repro.models import init_params
+
+    n_jobs = 5 if smoke else 8
+    n_seeds = 3 if smoke else 8
+
+    cfg = scaled_config(get_smoke_config("llama31-8b"), dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    rows = Rows()
+    restart = _restart_section(cfg, params, n_jobs, seed)
+    rows.add("prefix_store/restart", 0.0,
+             f"cold={restart['prefill_tokens_cold']};"
+             f"warm={restart['prefill_tokens_warm']};"
+             f"cut={restart['prefill_reduction']:.2f}x;byte_identical=1")
+
+    isolation = _isolation_sweep(n_seeds)
+    rows.add("prefix_store/isolation_sweep", 0.0,
+             f"seeds={isolation['seeds']};"
+             f"neighbor_checks={isolation['neighbor_checks']}")
+
+    tenancy = _tenancy_sim_section(n_jobs=8)
+    rows.add("prefix_store/tenancy", 0.0,
+             f"rejects={tenancy['quota_rejects']};"
+             f"shed={tenancy['shed_ownerships']};"
+             f"evictions={tenancy['tenant_evictions']}")
+
+    preflight = _preflight_section(n_dup=4)
+    rows.add("prefix_store/preflight", 0.0,
+             f"holds={preflight['preflight_holds']};"
+             f"prefill={preflight['prefill_tokens']}")
+
+    write_bench_json("prefix_store", {
+        "smoke": smoke,
+        "restart": restart,
+        "isolation": isolation,
+        "tenancy": tenancy,
+        "preflight": preflight,
+        "gates": {
+            "restart_byte_identical": True,
+            "prefill_tokens_cut_2x": True,
+            "jit_lattice_unchanged": True,
+            "neighbor_isolation_sweeps": True,
+            "quota_outputs_identical": True,
+            "preflight_holds_followers": True,
+        },
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes; gates only (CI)")
+    a = ap.parse_args()
+    main(smoke=a.smoke).emit()

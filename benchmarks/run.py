@@ -17,6 +17,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   §6.5/§8     agentic_online     closed-loop Continuum frontend + prefetch
   (ours)      control_plane_stress  k-step decode dispatch + 5k-session O(·)
   (ours)      chaos_soak         fault injection + graceful degradation
+  (ours)      prefix_store       cross-restart + multi-tenant store gates
 """
 import argparse
 import sys
@@ -42,6 +43,7 @@ MODULES = [
     ("agentic_online", {}),
     ("control_plane_stress", {}),
     ("chaos_soak", {}),
+    ("prefix_store", {}),
 ]
 
 

@@ -43,6 +43,7 @@ PASS = "lease"
 
 TARGET_FILES = [
     "src/repro/core/block_manager.py",
+    "src/repro/core/prefix_store.py",
     "src/repro/serving/scheduler.py",
     "src/repro/serving/server.py",
 ]
@@ -59,11 +60,12 @@ class LeaseSpec:
     timebound_kw: Optional[str] = None
 
 
-# a lease-acquiring call must be a method of the block manager (or a
-# scheduler self-call): `self.allocate`, `self.bm.match`, `bm.pin`.
-# Same-named methods of OTHER receivers (`prefix_trie.match` is a pure
-# trie walk) acquire nothing.
-_ACQ_RECEIVERS = frozenset({"self", "bm"})
+# a lease-acquiring call must be a method of the block manager, the
+# prefix store, or a scheduler self-call: `self.allocate`,
+# `self.bm.match`, `bm.pin`, `self.store.acquire`.  Same-named methods
+# of OTHER receivers (`prefix_trie.match` is a pure trie walk) acquire
+# nothing.
+_ACQ_RECEIVERS = frozenset({"self", "bm", "store"})
 
 
 LEASE_TABLE: Dict[str, LeaseSpec] = {
@@ -83,6 +85,11 @@ LEASE_TABLE: Dict[str, LeaseSpec] = {
     "pin": LeaseSpec(
         releases=frozenset({"unpin", "unpin_expired", "release"}),
         timebound_arg=1, timebound_kw="until"),
+    # store fetch pins the entry against eviction until release();
+    # a corrupt payload is purged via drop_corrupt before the release
+    "acquire": LeaseSpec(
+        releases=frozenset({"release"}),
+        none_guard=True),
 }
 
 # acquire-like APIs that self-manage their lease (they register it in a

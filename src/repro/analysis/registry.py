@@ -52,6 +52,8 @@ EMITTER_SCHEMAS: Tuple[Tuple[str, str, str, str], ...] = (
      "SIM_ENGINE_KEYS"),
     ("src/repro/core/block_manager.py", "BlockManager", "counters",
      "BM_COUNTER_KEYS"),
+    ("src/repro/core/prefix_store.py", "PrefixStore", "counters",
+     "STORE_COUNTER_KEYS"),
 )
 
 DOC_FILES = ("README.md", "docs/ARCHITECTURE.md", "docs/SERVING.md",

@@ -41,6 +41,14 @@ from repro.core.offload import (
     snap_to_grid_np,
     verify_half,
 )
+from repro.core.prefix_store import (
+    BatchReport,
+    PrefixStore,
+    PrefixStoreConfig,
+    content_key,
+    content_key_chain,
+    model_fingerprint,
+)
 from repro.core.prefix_trie import PrefixMatch, PrefixTrie
 from repro.core.treap import Treap
 
@@ -58,4 +66,6 @@ __all__ = [
     "dequantize_half", "half_checksum", "quantize_half",
     "snap_to_grid_np", "verify_half",
     "FAULT_SITES", "FaultPlan", "InjectedFault",
+    "BatchReport", "PrefixStore", "PrefixStoreConfig",
+    "content_key", "content_key_chain", "model_fingerprint",
 ]

@@ -50,6 +50,7 @@ from repro.core.freq import EwmaCounter, FreqParams
 from repro.core.offload import (HostEntry, HostHalf, OffloadConfig,
                                 ScaleCache, half_checksum, quantize_half,
                                 verify_half)
+from repro.core.prefix_store import PrefixStore
 from repro.core.prefix_trie import PrefixTrie
 
 
@@ -118,7 +119,8 @@ class BlockManager:
                  block_bytes: Optional[Tuple[int, int]] = None,
                  payload_half_bytes: Optional[Tuple[int, int]] = None,
                  pcie_bw: float = 1.2e10,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 store: Optional[PrefixStore] = None):
         self.num_blocks = num_blocks
         self.block_size = block_size
         # ---- KV sharding (sharded serving engine): the device page pool
@@ -149,6 +151,14 @@ class BlockManager:
         # therefore fit proportionally more blocks in the same budget.
         self.host_blocks = host_blocks
         self.host_tier: "OrderedDict[int, HostEntry]" = OrderedDict()
+        # ---- content-addressed global prefix store (core/prefix_store):
+        # chain hash -> content key for blocks this process has resolved,
+        # so eviction-time spills can deposit under restart-stable keys.
+        # The map is bounded (LRU) — it is a cache of resolutions, not an
+        # accounting structure.
+        self.store = store
+        self._content_of: "OrderedDict[int, bytes]" = OrderedDict()
+        self._content_cap = max(4 * num_blocks, 1024)
         # slot -> (k_half|None, v_half|None); None = read from pool.
         # ALSO purges any still-queued swap-in halves for the slot.
         self.swap_out_fn = swap_out_fn
@@ -257,14 +267,30 @@ class BlockManager:
 
     def match(self, tokens: Sequence[int], now: float,
               acquire: bool = True,
-              hashes: Optional[List[int]] = None) -> MatchResult:
+              hashes: Optional[List[int]] = None,
+              content_keys: Optional[List[bytes]] = None,
+              tenant: str = "default") -> MatchResult:
         """Find resident blocks for this token sequence (any subset!).
 
         With ``acquire=True`` hit blocks are ref-counted and removed from
         the evictable set, so a concurrent eviction can't take them.
-        ``hashes`` may be precomputed (admission retries reuse them)."""
+        ``hashes`` may be precomputed (admission retries reuse them).
+
+        ``content_keys`` (parallel to ``hashes``) binds each block's
+        chain hash to its restart-stable content key: the resolution is
+        cached for eviction-time store deposits, tenant interest is
+        registered, and a table+host miss falls through to the global
+        prefix store — a store hit stages the payload into the host
+        tier under the *current* chain hash, so the ordinary swap-in
+        path restores it (chain-hash↔content-key equivalence)."""
         if hashes is None:
             hashes = self.block_hashes(tokens)
+        if content_keys is not None and self.store is not None \
+                and self.store.enabled:
+            for pos, (h, ck) in enumerate(zip(hashes, content_keys)):
+                self._note_content(h, ck, tenant, pos)
+        else:
+            content_keys = None
         hit_slots: List[Optional[int]] = []
         hit_mask: List[bool] = []
         host_hits: List[bool] = []
@@ -283,7 +309,10 @@ class BlockManager:
                 hit_mask.append(False)
                 # only a COMPLETE host entry can serve a swap-in; a kept-K
                 # remnant still needs the block recomputed
-                host_hits.append(self._host_complete(h))
+                hh = self._host_complete(h)
+                if not hh and content_keys is not None:
+                    hh = self._store_fetch(content_keys[pos], h, tenant, now)
+                host_hits.append(hh)
                 continue
             host_hits.append(False)
             self.n_hits += 1
@@ -452,7 +481,7 @@ class BlockManager:
             else:
                 slot = self.policy.evict(now)
                 assert slot is not None
-                self._erase(slot)
+                self._erase(slot, now)
                 self.n_evictions += 1
             out.append(slot)
         for slot in out:
@@ -469,7 +498,7 @@ class BlockManager:
             blk.last_access = now
         return out
 
-    def _erase(self, slot: int) -> None:
+    def _erase(self, slot: int, now: float = 0.0) -> None:
         blk = self.blocks[slot]
         if blk.key is None:
             return
@@ -479,6 +508,9 @@ class BlockManager:
         was_v_pending = blk.v_pending
         blk.v_pending = False
         self._host_pinned.pop(key, None)
+        ck = None
+        if self.store is not None and self.store.enabled:
+            ck = self._content_of.get(key)
         if self.host_blocks > 0:
             e = self.host_tier.get(key)
             # committed block content is immutable (content-addressed by
@@ -511,9 +543,25 @@ class BlockManager:
                 self.host_resident_bytes += e.v.nbytes
             else:
                 self.n_clean_half_spills += 1
+            if ck is not None and e.complete:
+                # content is restart-stable: deposit under the content
+                # key too (the store clones; tier mutations can't reach
+                # the stored copy).  A quota rejection just recomputes.
+                self.store.deposit(ck, e, self._owner_of(ck), now)
             self.host_tier.move_to_end(key)
             self.n_swap_outs += 1
             self._enforce_host_budget()
+        elif ck is not None:
+            # no host tier configured, but the global store is on: read
+            # both halves and deposit straight to the store (the read
+            # also purges any still-queued swap-in halves for the slot)
+            k_raw = v_raw = None
+            if self.swap_out_fn is not None:
+                k_raw, v_raw = self.swap_out_fn(slot, True, True)
+            e = HostEntry(block_pos=blk.block_pos,
+                          k=self._encode_half(k_raw, key, "k"),
+                          v=self._encode_half(v_raw, key, "v"))
+            self.store.deposit(ck, e, self._owner_of(ck), now)
         blk.key = None
 
     # ------------------------------------------------------------------
@@ -526,6 +574,100 @@ class BlockManager:
     def _host_complete(self, key: int) -> bool:
         e = self.host_tier.get(key)
         return e is not None and e.complete
+
+    # ------------------------------------------------------------------
+    # content-addressed global prefix store bridge (core/prefix_store)
+    # ------------------------------------------------------------------
+    @property
+    def host_restore_active(self) -> bool:
+        """True when host→device swap-ins can happen at admission: a
+        host tier is configured OR the global prefix store can stage
+        entries into the (otherwise budget-less) tier."""
+        return self.host_blocks > 0 or \
+            (self.store is not None and self.store.enabled)
+
+    def content_keys(self, tokens: Sequence[int]) -> Optional[List[bytes]]:
+        """Restart-stable content keys for each full block (the content
+        analogue of :meth:`block_hashes`); None when no store is wired."""
+        if self.store is None or not self.store.enabled:
+            return None
+        return self.store.keys_for(tokens, self.block_size)
+
+    def _owner_of(self, ck: bytes) -> str:
+        return self.store.owner_hint(ck)
+
+    def _note_content(self, key: int, ck: bytes, tenant: str,
+                      block_pos: int) -> None:
+        """Cache the chain-hash→content-key resolution (bounded LRU) and
+        register the tenant's interest so later deposits attribute
+        ownership to every tenant sharing the prefix."""
+        self._content_of[key] = ck
+        self._content_of.move_to_end(key)
+        while len(self._content_of) > self._content_cap:
+            self._content_of.popitem(last=False)
+        self.store.register(ck, tenant, block_pos)
+
+    def _store_fetch(self, ck: bytes, key: int, tenant: str,
+                     now: float) -> bool:
+        """Resolve a table+host-tier miss against the global prefix
+        store.  A hit stages the payload into the host tier under the
+        CURRENT chain hash and reports a host hit — the ordinary
+        admission swap-in path then restores it into a device slot.
+        The fetch runs the same fault gauntlet as any host acquire
+        (``host_corrupt`` site + checksum verification); a corrupt
+        payload is purged from the store and the block recomputed
+        (§4 lossless)."""
+        entry = self.store.acquire(ck, tenant, now)
+        if entry is None:
+            return False
+        if self.faults is not None and self.faults.should_fire("host_corrupt"):
+            self._corrupt_entry(entry)
+        if not (verify_half(entry.k) and verify_half(entry.v)):
+            self.n_host_corruptions += 1
+            self.store.drop_corrupt(ck)
+            self.store.release(ck)
+            self.audit_after_fault()
+            return False
+        self.host_tier[key] = entry
+        self.host_resident_bytes += entry.nbytes
+        self.host_tier.move_to_end(key)
+        if self.host_blocks > 0:
+            # staged entry competes under the normal byte budget; it was
+            # just moved to the MRU end, so it is shed last — and if it
+            # IS shed, the admission swap-in misses and recomputes
+            self._enforce_host_budget()
+        self.store.release(ck)
+        return self._host_complete(key)
+
+    def export_resident(self, now: float) -> int:
+        """Deposit every committed block with a known content key into
+        the global prefix store: device-resident blocks are read via
+        ``swap_out_fn`` (non-destructive pool read), complete host-tier
+        entries deposit directly.  Called by the server's snapshot path
+        AFTER serve() drains (the pool read also purges queued swap
+        halves, which must be empty by then).  Returns deposits made."""
+        if self.store is None or not self.store.enabled:
+            return 0
+        n = 0
+        for key, slot in list(self.table.items()):
+            ck = self._content_of.get(key)
+            blk = self.blocks[slot]
+            if ck is None or blk.v_pending:
+                continue
+            k_raw = v_raw = None
+            if self.swap_out_fn is not None:
+                k_raw, v_raw = self.swap_out_fn(slot, True, True)
+            e = HostEntry(block_pos=blk.block_pos,
+                          k=self._encode_half(k_raw, key, "k"),
+                          v=self._encode_half(v_raw, key, "v"))
+            if self.store.deposit(ck, e, self._owner_of(ck), now):
+                n += 1
+        for key, e in list(self.host_tier.items()):
+            ck = self._content_of.get(key)
+            if ck is not None and e.complete and \
+                    self.store.deposit(ck, e, self._owner_of(ck), now):
+                n += 1
+        return n
 
     def _encode_half(self, raw, key: int, which: str) -> HostHalf:
         """Wire-encode one spilled half.  ``raw`` is None (simulation /
@@ -945,6 +1087,10 @@ class BlockManager:
         assert all(0 <= u <= self.shard_size
                    for u in self.per_shard_used()), \
             "per-shard occupancy out of range (free slot outside pool?)"
+        if self.store is not None:
+            # tenant-quota / byte accounting of the global prefix store
+            # audits with the rest of the cross-structure invariants
+            self.store.check_invariants()
         return {"free": len(free), "referenced": n_referenced,
                 "evictable": n_evictable, "pinned_ref0": n_pinned0}
 

@@ -181,6 +181,43 @@ class HostEntry:
             (self.v.nbytes if self.v else 0)
 
 
+def half_to_wire(half: Optional[HostHalf]) -> Optional[dict]:
+    """Pickle-stable plain-dict form of a wire half (the prefix store's
+    restart snapshot format).  Arrays are made contiguous so the
+    serialized bytes are layout-independent; ``data=None`` simulated
+    halves round-trip as pure byte accounting."""
+    if half is None:
+        return None
+    return {
+        "data": None if half.data is None
+        else np.ascontiguousarray(half.data),
+        "scale": None if half.scale is None
+        else np.ascontiguousarray(half.scale),
+        "nbytes": int(half.nbytes),
+        "fmt": half.fmt,
+        "checksum": half.checksum,
+    }
+
+
+def half_from_wire(d: Optional[dict]) -> Optional[HostHalf]:
+    if d is None:
+        return None
+    return HostHalf(data=d["data"], scale=d["scale"],
+                    nbytes=int(d["nbytes"]), fmt=d["fmt"],
+                    checksum=d["checksum"])
+
+
+def entry_to_wire(e: HostEntry) -> dict:
+    """Plain-dict form of a host entry (both halves)."""
+    return {"block_pos": int(e.block_pos),
+            "k": half_to_wire(e.k), "v": half_to_wire(e.v)}
+
+
+def entry_from_wire(d: dict) -> HostEntry:
+    return HostEntry(block_pos=int(d["block_pos"]),
+                     k=half_from_wire(d["k"]), v=half_from_wire(d["v"]))
+
+
 def _f8_dtype():
     import ml_dtypes
     return np.dtype(ml_dtypes.float8_e4m3fn)

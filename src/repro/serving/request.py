@@ -54,6 +54,10 @@ class Request:
     # chain-hash namespace: 0 shares blocks across requests; any other
     # value isolates this request (the no-prefix-sharing baseline)
     hash_salt: int = 0
+    # tenant attribution for the content-addressed global prefix store:
+    # quota charging and isolation accounting key on this (KV bytes are
+    # still shared freely — only store *retention* is per-tenant)
+    tenant: str = "default"
     # -- online-frontend metadata (closed-loop session serving) -------------
     # which turn of its session this request is (0 = first); resumed marks
     # turns that follow a tool-call suspension — their demand swap-ins are

@@ -150,13 +150,34 @@ class ChunkingScheduler:
         ending mid-block is completed by a copy-on-write fork of the donor
         request's block, so only the post-divergence suffix is computed."""
         bs = self.cfg.block_size
+        # pre-flight dedup hold (prefix-store analyze_batch): a follower
+        # whose leading prompt block duplicates a batch-mate's waits for
+        # the leader to finish prefilling, so the shared blocks are one
+        # prefill + table hits instead of N concurrent identical ones.
+        # The hold can never deadlock: a stuck leader is head-of-line
+        # and the stall-rejection path terminates it, releasing us.
+        leader = getattr(req, "_dedup_hold", None)
+        if leader is not None:
+            if not leader.terminal and \
+                    leader.state in (RequestState.WAITING,
+                                     RequestState.PREFILL):
+                return False
+            req._dedup_hold = None
         n_prompt_blocks = len(req.prompt_tokens) // bs
         salt = self.bm.request_salt(req.rid, req.hash_salt)
         hashes = getattr(req, "_prompt_hashes", None)
         if hashes is None:
             hashes = self.bm.block_hashes(req.prompt_tokens, salt=salt)
             req._prompt_hashes = hashes
-        m = self.bm.match(req.prompt_tokens, now, hashes=hashes)  # acquires hits
+        cks = None
+        if salt == 0 and self.bm.store is not None and self.bm.store.enabled:
+            cks = getattr(req, "_content_keys", None)
+            if cks is None:
+                cks = self.bm.content_keys(req.prompt_tokens)
+                req._content_keys = cks
+        m = self.bm.match(req.prompt_tokens, now, hashes=hashes,
+                          content_keys=cks,
+                          tenant=req.tenant)  # acquires hits
         total_blocks = (req.target_len + bs - 1) // bs
         needed = total_blocks - m.num_hits
         # pool-OOM fault site: an injected allocation failure takes the
@@ -187,7 +208,7 @@ class ChunkingScheduler:
         # host-tier hits (paper §7): swap the payload back into the freshly
         # allocated device slot instead of recomputing the block
         swapped = set()
-        if self.bm.host_blocks > 0:
+        if self.bm.host_restore_active:
             for b in range(n_prompt_blocks):
                 if b < len(m.host_hits) and m.host_hits[b] \
                         and not m.hit_mask[b] \

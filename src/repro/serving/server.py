@@ -39,10 +39,13 @@ from repro.core import (
     InjectedFault,
     LifespanTracker,
     OffloadConfig,
+    PrefixStore,
+    PrefixStoreConfig,
     analytic_cost_model,
     chain_hash,
     hash_seed,
     make_policy,
+    model_fingerprint,
 )
 from repro.serving.engine import Engine, EngineConfig, StepHandle
 from repro.serving.request import Request, RequestState, SessionStats
@@ -199,6 +202,11 @@ class ServerConfig:
     # run BlockManager.check_invariants() every N dispatched steps
     # (0 = only after injected faults / at drain when a plan is attached)
     audit_every: int = 0
+    # content-addressed global prefix store (core/prefix_store.py):
+    # cross-restart, multi-tenant dedup of prompt blocks.  None (or the
+    # default capacity_bytes=0) disables it; the server still constructs
+    # a store object so its counters merge as zeros into every result.
+    prefix_store: Optional[PrefixStoreConfig] = None
 
 
 class AsymCacheServer:
@@ -224,6 +232,14 @@ class AsymCacheServer:
                    * max(cfg.n_kv_heads, 1) * cfg.head_dim
                    * np.dtype(cfg.dtype).itemsize)
         wire_half = int(fp_half * scfg.offload.payload_ratio)
+        # content-addressed global prefix store: always constructed (the
+        # default config is disabled, counters merge as zeros); the
+        # fingerprint binds stored KV to this exact architecture+weights
+        pscfg = scfg.prefix_store or PrefixStoreConfig()
+        self.store = PrefixStore(
+            pscfg, model_fingerprint(cfg, pscfg.weights_version))
+        if pscfg.snapshot_path:
+            self.store.load(pscfg.snapshot_path, now=0.0)
         self.bm = BlockManager(scfg.num_blocks, scfg.block_size, policy,
                                self.cost_model, self.freq,
                                host_blocks=scfg.host_blocks,
@@ -233,7 +249,8 @@ class AsymCacheServer:
                                block_bytes=(fp_half, fp_half),
                                payload_half_bytes=(wire_half, wire_half),
                                pcie_bw=scfg.pcie_bw,
-                               faults=scfg.faults)
+                               faults=scfg.faults,
+                               store=self.store)
         self.sched = ChunkingScheduler(scfg.scheduler, self.bm)
         if scfg.execute_model:
             ecfg = ecfg or EngineConfig(
@@ -272,7 +289,7 @@ class AsymCacheServer:
             self.sched.pending_ops_fn = lambda: bool(
                 self.engine._pending_copies or self.engine._pending_swap_k
                 or self.engine._pending_swap_v)
-            if scfg.host_blocks > 0:
+            if scfg.host_blocks > 0 or self.store.enabled:
                 self.bm.swap_out_fn = \
                     lambda slot, need_k=True, need_v=True: \
                     self.engine.swap_out(slot, need_k, need_v)
@@ -423,6 +440,7 @@ class AsymCacheServer:
                 self._consec_source_errors = 0
             for req in due:
                 self._on_arrival(req)
+            self._preflight(due)
             self._sweep_deadlines()
 
             if self.uses_pins:
@@ -558,6 +576,9 @@ class AsymCacheServer:
         # so result-schema consumers never need key-existence checks
         out.update(self.bm.counters())
         out.update(self.bm.prefetch_counters())
+        # content-addressed prefix-store accounting (store_*/tenant_*) —
+        # always present, zeros when the store is disabled
+        out.update(self.store.counters())
         # per-structure control-plane op counts (treap rotations, trie
         # walks, evictor re-ranks) — the stress benchmark divides these
         # by `steps` and gates them sublinear in resident sessions
@@ -601,6 +622,52 @@ class AsymCacheServer:
                              available=self.scfg.num_blocks)
                 return
         self.sched.submit(req)
+
+    # ------------------------------------------------------------------
+    # content-addressed global prefix store (core/prefix_store.py)
+    # ------------------------------------------------------------------
+    def _content_keys_for(self, req: Request) -> Optional[List[bytes]]:
+        """Restart-stable content keys of the request's full prompt
+        blocks, cached on the request; None when the store is off or the
+        request runs in a private (non-shared) hash namespace."""
+        if not self.store.enabled \
+                or self.bm.request_salt(req.rid, req.hash_salt) != 0:
+            return None
+        cks = getattr(req, "_content_keys", None)
+        if cks is None:
+            cks = self.bm.content_keys(req.prompt_tokens)
+            req._content_keys = cks
+        return cks
+
+    def _preflight(self, due: List[Request]) -> None:
+        """Admission-time dedup pre-flight: analyze the arriving batch's
+        content keys and mark duplicate-prefix followers so the
+        scheduler holds them until their leader's shared blocks commit
+        (one prefill + N-1 table hits instead of N identical prefills)."""
+        if not self.store.enabled:
+            return
+        batch, reqs = [], []
+        for r in due:
+            if r.terminal:
+                continue
+            cks = self._content_keys_for(r)
+            if cks:
+                batch.append((r.tenant, cks))
+                reqs.append(r)
+        if len(batch) < 2:
+            return
+        report = self.store.analyze_batch(batch)
+        for follower, leader in report.followers:
+            reqs[follower]._dedup_hold = reqs[leader]
+
+    def snapshot_store(self, path: str) -> int:
+        """Persist the prefix store for a restart: deposit every
+        committed resident block with a known content key (device pool
+        read + host-tier entries), then write the snapshot.  Call after
+        :meth:`serve` drains.  Returns the number of deposits made."""
+        n = self.bm.export_resident(self.now)
+        self.store.save(path, self.now)
+        return n
 
     # ------------------------------------------------------------------
     # per-request fault domains (docs/SERVING.md "Failure semantics")

@@ -296,6 +296,9 @@ class SharedPrefixConfig:
     vocab: int = 250
     qps: float = 2.0
     seed: int = 0
+    # round-robin tenant attribution (prefix-store quota accounting);
+    # 1 leaves every request on the "default" tenant
+    tenants: int = 1
 
 
 def shared_prefix_workload(cfg: SharedPrefixConfig) -> List[Request]:
@@ -314,5 +317,7 @@ def shared_prefix_workload(cfg: SharedPrefixConfig) -> List[Request]:
             rid=rid, session_id=rid, prompt_tokens=prompt,
             output_script=_tokens(rng, rng.randint(*cfg.output_len),
                                   cfg.vocab),
-            arrival=t))
+            arrival=t,
+            tenant=("default" if cfg.tenants <= 1
+                    else f"tenant{rid % cfg.tenants}")))
     return requests

@@ -126,6 +126,45 @@ def test_lease_balanced_paths_pass():
     assert leases.scan_source(src) == []
 
 
+def test_lease_flags_unreleased_store_acquire():
+    src = textwrap.dedent("""\
+        def fetch(self, ck, key, tenant, now, fast):
+            entry = self.store.acquire(ck, tenant, now)
+            if entry is None:
+                return False
+            if fast:
+                return True
+            self.host_tier[key] = entry
+            self.store.release(ck)
+            return True
+    """)
+    fs = leases.scan_source(src)
+    assert fs, "expected leaked store lease"
+    assert all(f.code == "leaked-lease" for f in fs)
+    # the pin leaks at the fast-path early return (line 6)
+    assert [(f.line, f.path) for f in fs] == [(6, "fixture.py")]
+    assert "acquire" in fs[0].message and "line 2" in fs[0].message
+
+
+def test_lease_store_fetch_shaped_paths_pass():
+    # the shape of BlockManager._store_fetch: linear, release on every
+    # path after the acquire (incl. the corrupt-payload purge path)
+    src = textwrap.dedent("""\
+        def fetch(self, ck, key, tenant, now, ok):
+            entry = self.store.acquire(ck, tenant, now)
+            if entry is None:
+                return False
+            if not ok:
+                self.store.drop_corrupt(ck)
+                self.store.release(ck)
+                return False
+            self.host_tier[key] = entry
+            self.store.release(ck)
+            return True
+    """)
+    assert leases.scan_source(src) == []
+
+
 def test_lease_repo_tree_clean():
     fs = leases.run(REPO)
     assert [f for f in fs if not f.suppressed] == [], \
@@ -169,6 +208,42 @@ def test_registry_flags_counter_renamed_on_one_side(tmp_path):
     f = by_code["dead-schema-key"]
     assert f.path == "tests/test_perf_counters.py" and f.line == 3
     assert "decode_tokens_emitted" in f.message
+
+
+STORE_EMITTER = textwrap.dedent("""\
+    class PrefixStore:
+        def counters(self):
+            return {
+                "store_hits": self.n_hits,
+                "store_RENAMED": self.n_misses,
+            }
+""")
+
+STORE_TEST = textwrap.dedent("""\
+    STORE_COUNTER_KEYS = frozenset({
+        "store_hits",
+        "store_misses",
+    })
+""")
+
+
+def test_registry_covers_store_emitter(tmp_path):
+    """The pass knows PrefixStore.counters() <-> STORE_COUNTER_KEYS:
+    a key renamed on either side is flagged on the side that drifted."""
+    (tmp_path / "src" / "repro" / "core").mkdir(parents=True)
+    (tmp_path / "tests").mkdir()
+    (tmp_path / "src" / "repro" / "core" / "prefix_store.py").write_text(
+        STORE_EMITTER)
+    (tmp_path / "tests" / "test_perf_counters.py").write_text(STORE_TEST)
+    fs = registry.run(tmp_path)
+    by_code = {f.code: f for f in fs}
+    assert "unregistered-counter" in by_code, [f.render() for f in fs]
+    f = by_code["unregistered-counter"]
+    assert f.path == "src/repro/core/prefix_store.py"
+    assert "store_RENAMED" in f.message
+    f = by_code["dead-schema-key"]
+    assert f.path == "tests/test_perf_counters.py"
+    assert "store_misses" in f.message
 
 
 def test_registry_repo_tree_clean():

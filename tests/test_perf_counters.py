@@ -104,6 +104,29 @@ BM_COUNTER_KEYS = frozenset({
     "pending_purges",
 })
 
+# frozen key set of PrefixStore.counters() — the content-addressed
+# store/tenancy accounting serve() merges into every result (zeros when
+# the store is disabled), read by benchmarks/prefix_store.py's gates
+STORE_COUNTER_KEYS = frozenset({
+    "store_entries",
+    "store_bytes",
+    "store_puts",
+    "store_hits",
+    "store_misses",
+    "store_evictions",
+    "store_expired",
+    "store_restored",
+    "store_corrupt_drops",
+    "store_fingerprint_drops",
+    "store_quota_rejects",
+    "store_preflight_reports",
+    "store_preflight_dup_blocks",
+    "store_preflight_holds",
+    "tenant_count",
+    "tenant_quota_evictions",
+    "tenant_shed_ownerships",
+})
+
 
 @pytest.fixture(scope="module")
 def served():
@@ -216,6 +239,32 @@ def test_bm_counter_schema_and_server_result(served):
         if host_blocks == 0:
             assert res["bytes_swapped_out_k"] == 0
             assert res["host_entries"] == 0
+
+
+def test_store_counter_schema_and_server_result():
+    """PrefixStore.counters() keys are frozen, and every server result —
+    store enabled or disabled — carries them (zeros, never missing), so
+    the prefix-store benchmark's gates can't silently go vacuous."""
+    from repro.core import PrefixStoreConfig
+    cfg = get_config("llama31-8b")
+    cm = analytic_cost_model(cfg, H20)
+    for pscfg in (None, PrefixStoreConfig(capacity_bytes=1 << 20,
+                                          tenant_quota_bytes=1 << 18)):
+        scfg = ServerConfig(
+            policy="asymcache", num_blocks=128, block_size=BLOCK,
+            clock="model", execute_model=False, prefix_store=pscfg,
+            scheduler=SchedulerConfig(token_budget=256, max_chunk=96,
+                                      max_prefills=2, max_decodes=8))
+        sim = AsymCacheServer(cfg, None, scfg, cost_model=cm,
+                              sim_cost_model=cm)
+        sc = sim.store.counters()
+        assert set(sc) == STORE_COUNTER_KEYS
+        res = sim.run(decode_burst_workload(n_requests=6, seed=5))
+        assert STORE_COUNTER_KEYS <= set(res)
+        for key in STORE_COUNTER_KEYS:
+            assert isinstance(res[key], int) and res[key] >= 0, key
+        if pscfg is None:
+            assert all(res[k] == 0 for k in STORE_COUNTER_KEYS)
 
 
 def test_control_plane_counts_schema():
